@@ -1,0 +1,54 @@
+"""Fig 19 — feature ablation on the hybrid inference/training stack.
+
+Configurations: scheduler-only (quotas, no stealing/atomization) ->
++stealing -> +atomization (full).  Paper: TPC scheduler brings HP tails to
+~1.38x ideal; atomization to ~1.19x."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.scenarios import (DEV, be_trainers, calibrated, fmt_csv,
+                                  frac_throughput, hp_services)
+from repro.core.lithos import evaluate, run_alone
+from repro.core.scheduler import LithOSConfig
+
+# the paper's progression: unmanaged sharing -> TPC scheduler (quotas +
+# stealing) -> + kernel atomization (full LithOS)
+VARIANTS = {
+    "baseline(mps)": None,                    # no quota enforcement
+    "tpc_scheduler": LithOSConfig(atomize=False, steal=True),
+    "+atomization(full)": LithOSConfig(atomize=True, steal=True),
+}
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("bench", "variant", "metric", "value", "unit")]
+    horizon = 6.0 if quick else 12.0
+    hp = calibrated(replace(hp_services()["bert"], name="hp",
+                            quota_slices=DEV.n_slices), 0.8)
+    be = replace(be_trainers()["llama_ft"], name="be")
+    ideal = max(run_alone(DEV, hp, horizon=horizon, seed=51).client("hp").p99,
+                1e-9)
+    solo_be = run_alone(DEV, be, horizon=horizon, seed=51)
+    be_alone = max(frac_throughput(solo_be, be, "be", horizon), 1e-9)
+    for name, cfgv in VARIANTS.items():
+        system = "mps" if cfgv is None else "lithos"
+        res = evaluate(system, DEV, [hp, be], horizon=horizon, seed=51,
+                       lithos_config=cfgv)
+        H, E = res.client("hp"), res.client("be")
+        rows.append(fmt_csv("fig19", name, "hp_p99_vs_ideal",
+                            f"{H.p99/ideal:.2f}", "x"))
+        rows.append(fmt_csv("fig19", name, "hp_throughput_vs_load",
+                            f"{H.throughput/max(hp.rps,1e-9):.2f}", "x"))
+        rows.append(fmt_csv("fig19", name, "be_throughput_vs_alone",
+                            f"{frac_throughput(res, be, 'be', horizon)/be_alone:.2f}",
+                            "x"))
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Fig 20 — atomization case study: P95 HP latency vs BE batch size and
+BE sequence length.
+
+HP BERT-stand-in inference collocated with (a) BE training at growing batch
+sizes, (b) BE LLM inference at growing prompt lengths.  Compared: full
+LithOS, LithOS w/o atomization, REEF.  Paper: LithOS beats REEF 6.5x/3.9x;
+atomization itself contributes 2x/1.3x."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.scenarios import DEV, be_trainers, calibrated, fmt_csv, hp_services
+from repro.core.lithos import evaluate, run_alone
+from repro.core.scheduler import LithOSConfig
+
+SYSTEMS = {
+    "lithos": LithOSConfig(atomize=True),
+    "lithos_no_atom": LithOSConfig(atomize=False),
+}
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("bench", "case", "system", "p95_ms", "vs_ideal")]
+    horizon = 6.0 if quick else 10.0
+    hp = calibrated(replace(hp_services()["bert"], name="hp",
+                            quota_slices=DEV.n_slices), 0.6)
+    ideal = max(run_alone(DEV, hp, horizon=horizon, seed=61)
+                .client("hp").p(95), 1e-9)
+
+    batches = [8, 32] if quick else [4, 16, 64]
+    for b in batches:
+        be = replace(be_trainers()["llama_ft"], name="be", train_batch=b)
+        for sysname, cfgv in SYSTEMS.items():
+            res = evaluate("lithos", DEV, [hp, be], horizon=horizon,
+                           seed=61, lithos_config=cfgv)
+            p95 = res.client("hp").p(95)
+            rows.append(fmt_csv("fig20a", f"train_bs{b}", sysname,
+                                f"{p95*1e3:.2f}", f"{p95/ideal:.2f}x"))
+        res = evaluate("reef", DEV, [hp, be], horizon=horizon, seed=61)
+        p95 = res.client("hp").p(95)
+        rows.append(fmt_csv("fig20a", f"train_bs{b}", "reef",
+                            f"{p95*1e3:.2f}", f"{p95/ideal:.2f}x"))
+
+    seqs = [2048] if quick else [512, 2048, 8192]
+    for s in seqs:
+        be = replace(hp_services()["llama3"], name="be", rps=0.0,
+                     quota_slices=0, prompt_mix=((s, 1.0),),
+                     priority=__import__("repro.core.types",
+                                         fromlist=["Priority"]
+                                         ).Priority.BEST_EFFORT)
+        for sysname, cfgv in SYSTEMS.items():
+            res = evaluate("lithos", DEV, [hp, be], horizon=horizon,
+                           seed=62, lithos_config=cfgv)
+            p95 = res.client("hp").p(95)
+            rows.append(fmt_csv("fig20b", f"seq{s}", sysname,
+                                f"{p95*1e3:.2f}", f"{p95/ideal:.2f}x"))
+        res = evaluate("reef", DEV, [hp, be], horizon=horizon, seed=62)
+        p95 = res.client("hp").p(95)
+        rows.append(fmt_csv("fig20b", f"seq{s}", "reef",
+                            f"{p95*1e3:.2f}", f"{p95/ideal:.2f}x"))
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Fig 12 — per-kernel frequency-scaling sensitivity.
+
+Runs workloads solo under the DVFS governor's learning protocol and
+compares the learned sensitivity s per kernel against the cost model's
+ground truth (compute-bound -> s~1, memory-bound -> s~0)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.scenarios import DEV, be_trainers, calibrated, fmt_csv, hp_services
+from repro.core.costmodel import CostModel
+from repro.core.lithos import run_alone
+from repro.core.scheduler import LithOSConfig
+
+
+def ground_truth_sensitivity(cost: CostModel, work, slices: int) -> float:
+    """d(latency)/d(1/f) normalized — 1 if compute-bound, 0 if memory."""
+    l_full = cost.latency(work, slices, 1.0)
+    l_half = cost.latency(work, slices, 0.5)
+    return max(0.0, min(1.5, (l_half / l_full - 1.0) / 1.0))
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("bench", "case", "value", "unit")]
+    cost = CostModel(DEV)
+    cases = {**{k: v for k, v in list(hp_services().items())[:2]},
+             **{k: v for k, v in list(be_trainers().items())[:1 if quick else 3]}}
+    for name, app in cases.items():
+        app = calibrated(app, 0.5)
+        res = run_alone(DEV, app, horizon=4.0 if quick else 8.0,
+                        system="lithos",
+                        lithos_config=LithOSConfig(dvfs=True, atomize=False))
+        gov = res.policy.governor
+        errs, senss = [], []
+        for key, st in gov.stats.items():
+            if not st.measured:
+                continue
+            recs = [r for r in res.records if r.task.key() == key]
+            if not recs:
+                continue
+            gt = ground_truth_sensitivity(cost, recs[0].task.work,
+                                          recs[0].slices)
+            senss.append(st.s)
+            errs.append(abs(st.s - gt))
+        if senss:
+            rows.append(fmt_csv("fig12", f"{name}/kernels_measured",
+                                len(senss), "count"))
+            rows.append(fmt_csv("fig12", f"{name}/mean_sensitivity",
+                                f"{np.mean(senss):.3f}", "s"))
+            rows.append(fmt_csv("fig12", f"{name}/mean_abs_fit_error",
+                                f"{np.mean(errs):.3f}", "s"))
+        rows.append(fmt_csv("fig12", f"{name}/aggregate_S",
+                            f"{gov.aggregate_sensitivity():.3f}", "S"))
+        rows.append(fmt_csv("fig12", f"{name}/f_target",
+                            f"{gov.target_frequency():.2f}", "f/fmax"))
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

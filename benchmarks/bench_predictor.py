@@ -1,0 +1,67 @@
+"""§7.4 — latency-prediction accuracy.
+
+Runs the inference-inference and inference-training stacks under full
+LithOS and reports misprediction rates (|err| > 50 us) and error tails for
+HP and BE work separately.  Paper: HP 0.9%/0.38%, BE 14%/11%; P99 error
+49/31 us."""
+from __future__ import annotations
+
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.scenarios import DEV, be_trainers, calibrated, fmt_csv, hp_services
+from repro.core.lithos import evaluate
+from repro.core.types import Priority
+
+THRESH = 50e-6
+
+
+def accuracy(pred_log, prio):
+    pairs = [(p, a) for p, a, pr in pred_log if pr == int(prio)]
+    if not pairs:
+        return float("nan"), float("nan")
+    errs = [abs(p - a) for p, a in pairs]
+    mis = float(np.mean([e > THRESH for e in errs]))
+    p99 = float(np.percentile(errs, 99))
+    return mis, p99
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("bench", "env", "metric", "value", "unit")]
+    horizon = 6.0 if quick else 12.0
+    hp = hp_services()
+    envs = {
+        "inf-inf": [
+            calibrated(replace(hp["resnet"], name="hpA",
+                               quota_slices=40), 0.35),
+            calibrated(replace(hp["bert"], name="hpB", quota_slices=14),
+                       0.2),
+            replace(hp["gptj"], name="be", rps=0.0, quota_slices=0,
+                    priority=Priority.BEST_EFFORT),
+        ],
+        "inf-train": [
+            calibrated(replace(hp["bert"], name="hp",
+                               quota_slices=DEV.n_slices), 0.7),
+            replace(be_trainers()["llama_ft"], name="be"),
+        ],
+    }
+    for env, apps in envs.items():
+        res = evaluate("lithos", DEV, apps, horizon=horizon, seed=71)
+        log = res.policy.pred_log
+        for label, prio in (("hp", Priority.HIGH),
+                            ("be", Priority.BEST_EFFORT)):
+            mis, p99 = accuracy(log, prio)
+            rows.append(fmt_csv("pred", env, f"{label}_misprediction",
+                                f"{mis*100:.2f}", "%"))
+            rows.append(fmt_csv("pred", env, f"{label}_err_p99",
+                                f"{p99*1e6:.1f}", "us"))
+        rows.append(fmt_csv("pred", env, "n_predictions", len(log), "count"))
+    for r in rows:
+        print(r)
+    print(fmt_csv("pred", "derived", "paper_hp_rates", "0.9/0.38", "%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

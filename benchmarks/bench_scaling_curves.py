@@ -1,0 +1,83 @@
+"""Fig 11 — per-kernel TPC (core-slice) scaling curves + fit accuracy.
+
+Runs each workload solo under LithOS with right-sizing probes enabled,
+collects the online two-point Amdahl fits, and reports the kernel-runtime-
+weighted R^2 against additional ground-truth observations (paper §7.2:
+0.92-0.99)."""
+from __future__ import annotations
+
+import numpy as np
+
+from dataclasses import replace
+
+from benchmarks.scenarios import DEV, be_trainers, calibrated, fmt_csv, hp_services
+from repro.core.costmodel import CostModel
+from repro.core.lithos import run_alone
+from repro.core.scheduler import LithOSConfig
+from repro.core.types import Priority
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("bench", "case", "value", "unit")]
+    cases = {**{k: v for k, v in list(hp_services().items())[:2 if quick else 5]},
+             **{k: v for k, v in list(be_trainers().items())[:2 if quick else 6]}}
+    cost = CostModel(DEV)
+    for name, app in cases.items():
+        # offline characterization: best-effort priority => full-range
+        # (all-slices, 1-slice) probes, the paper's fitting protocol
+        app = replace(calibrated(app, 0.5), priority=Priority.BEST_EFFORT)
+        res = run_alone(DEV, app, horizon=4.0 if quick else 8.0,
+                        system="lithos",
+                        lithos_config=LithOSConfig(rightsize=True, probe_low=True))
+        rs = res.policy.rightsizer
+        # extra ground-truth points for R^2: evaluate fits vs cost model
+        r2s, weights = [], []
+        for key, fit in rs.fits.items():
+            if not fit.fitted or fit.m <= 0:
+                continue          # probe-skipped big kernels: no curve
+            # reconstruct the FULL task work from any recorded completion
+            # (atoms carry 1/n of the kernel's work)
+            recs = [r for r in res.records if r.task.key() == key]
+            if not recs:
+                continue
+            full = [r for r in recs if r.task.atom_of is None]
+            if full:
+                recs = full
+            else:
+                n = recs[0].task.atom_of[2]
+                from dataclasses import replace as _rep
+                recs = [_rep(recs[0], task=_rep(
+                    recs[0].task, work=recs[0].task.work.scaled(n)))]
+            w = recs[0].task.work
+            # evaluate over the operational range: [min observed point,
+            # occupancy bound] — the filtering heuristic (§4.5) ensures the
+            # system never allocates beyond the bound, where latency is
+            # flat and an Amdahl curve is meaningless
+            t_lo = max(1, min(fit.points))
+            t_hi = min(54, rs.occupancy_bound(recs[0].task))
+            if t_hi < 16 or t_hi <= t_lo + 1:
+                continue   # paper computes R^2 only "for kernels where the
+                           # possible TPCs value exceeds the threshold"—short
+                           # outliers are the filtering heuristic's job
+            grid = sorted({t_lo, (t_lo + t_hi) // 2,
+                           max(t_lo + 1, int(0.75 * t_hi)), t_hi})
+            obs = {t: cost.latency(w, t) for t in grid}
+            r2s.append(fit.r_squared(obs))
+            weights.append(sum(r.latency for r in recs))
+        if r2s:
+            wavg = float(np.average(r2s, weights=weights))
+            rows.append(fmt_csv("fig11", f"{name}/weighted_r2",
+                                f"{wavg:.3f}", "r2"))
+            rows.append(fmt_csv("fig11", f"{name}/n_kernels_fit",
+                                len(r2s), "count"))
+    for r in rows:
+        print(r)
+    vals = [float(r.split(",")[2]) for r in rows[1:] if "weighted_r2" in r]
+    if vals:
+        print(fmt_csv("fig11", "derived/mean_r2", f"{np.mean(vals):.3f}",
+                      "r2  (paper: 0.92-0.99)"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig16,...]
+
+Prints CSV rows (bench,case,...,value,unit) per figure plus derived
+paper-claim comparisons; exits non-zero if any module crashes."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig10_kernel_latency", "benchmarks.bench_kernel_latency"),
+    ("fig11_scaling_curves", "benchmarks.bench_scaling_curves"),
+    ("fig12_freq_curves", "benchmarks.bench_freq_curves"),
+    ("fig13-15_inference_stacking", "benchmarks.bench_inference_stacking"),
+    ("fig16_hybrid_stacking", "benchmarks.bench_hybrid_stacking"),
+    ("fig17_rightsizing", "benchmarks.bench_rightsizing"),
+    ("fig18_dvfs", "benchmarks.bench_dvfs"),
+    ("fig19_ablation", "benchmarks.bench_ablation"),
+    ("fig20_atomization", "benchmarks.bench_atomization"),
+    ("sec7.4_predictor", "benchmarks.bench_predictor"),
+    ("pallas_atoms", "benchmarks.bench_pallas_atoms"),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced combination grids / shorter horizons")
+    ap.add_argument("--only", default="",
+                    help="comma-separated substring filters on module names")
+    args = ap.parse_args(argv)
+    only = [s for s in args.only.split(",") if s]
+
+    failures = []
+    t_all = time.time()
+    for name, module in MODULES:
+        if only and not any(o in name for o in only):
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run(quick=args.quick)
+            print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:                        # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"[{name}] FAILED", flush=True)
+    print(f"\n===== benchmarks finished in {time.time()-t_all:.1f}s; "
+          f"{len(failures)} failures {failures} =====")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from repro.checkpoint.sharded import (CheckpointManager, restore_checkpoint,
+                                      save_checkpoint)

@@ -1,0 +1,214 @@
+"""Sharded, asynchronous checkpointing with elastic restore.
+
+Layout (mesh-independent, so restore works onto any mesh):
+
+    <dir>/step_<N>/
+        manifest.json        # leaf path -> {shape, dtype, shard_file, kind}
+        shard_<k>.npz        # leaves bin-packed by bytes into n_shards files
+
+* **Async save**: leaves are fetched to host (blocking, cheap) and the file
+  writes happen on a background thread; ``wait()`` joins.  A ``COMMIT``
+  marker is written last, so partially written checkpoints are never
+  restored (crash-consistent).
+* **Elastic restore**: the manifest stores logical arrays only.  Restore
+  reads host arrays and ``jax.device_put``s them with shardings resolved
+  against the *current* mesh — loading a 512-chip checkpoint onto 256 chips
+  (or onto 1 CPU device in tests) is the same code path.
+* QTensor optimizer moments round-trip via their pytree (q, scale) leaves.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "##"
+
+# dtypes npz cannot store natively: persisted as raw bits + manifest dtype
+try:
+    import ml_dtypes
+    _BITCAST = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+                "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+                "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+except ImportError:                                      # pragma: no cover
+    _BITCAST = {}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    enc = _BITCAST.get(str(arr.dtype))
+    return arr.view(enc[0]) if enc else arr
+
+
+def _from_storable(arr: np.ndarray, dtype: str) -> np.ndarray:
+    enc = _BITCAST.get(dtype)
+    return arr.view(enc[1]) if enc else arr
+
+
+def _flatten(tree: PyTree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(tree: PyTree, directory: str, step: int, *,
+                    n_shards: int = 4, async_write: bool = True
+                    ) -> "SaveHandle":
+    """Write ``tree`` under ``directory/step_<step>``; returns a handle
+    whose ``wait()`` blocks until the COMMIT marker is on disk."""
+    leaves = _flatten(tree)
+    host = {k: np.asarray(v) for k, v in leaves.items()}   # fetch now
+    stepdir = os.path.join(directory, f"step_{step}")
+    tmpdir = stepdir + ".tmp"
+
+    def write():
+        os.makedirs(tmpdir, exist_ok=True)
+        # bin-pack leaves into shards by bytes (largest first)
+        order = sorted(host, key=lambda k: -host[k].nbytes)
+        bins: list[tuple[int, list[str]]] = [(0, []) for _ in range(n_shards)]
+        for k in order:
+            i = min(range(n_shards), key=lambda j: bins[j][0])
+            bins[i] = (bins[i][0] + host[k].nbytes, bins[i][1] + [k])
+        manifest = {}
+        for i, (_, keys) in enumerate(bins):
+            if not keys:
+                continue
+            fname = f"shard_{i}.npz"
+            np.savez(os.path.join(tmpdir, fname),
+                     **{k: _to_storable(host[k]) for k in keys})
+            for k in keys:
+                manifest[k] = {"shape": list(host[k].shape),
+                               "dtype": str(host[k].dtype),
+                               "shard": fname}
+        with open(os.path.join(tmpdir, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        open(os.path.join(tmpdir, "COMMIT"), "w").close()
+        if os.path.isdir(stepdir):
+            shutil.rmtree(stepdir)
+        os.rename(tmpdir, stepdir)
+        handle.committed = True
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        handle = SaveHandle(t, stepdir)
+        t.start()
+        return handle
+    handle = SaveHandle(None, stepdir)
+    write()
+    return handle
+
+
+class SaveHandle:
+    def __init__(self, thread: Optional[threading.Thread], path: str):
+        self._thread = thread
+        self.path = path
+        self.committed = False
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+        # the committed dir may have been GC'd (keep-last-k) by a later
+        # save; the flag records that the write itself succeeded
+        assert self.committed, f"checkpoint {self.path} did not commit"
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "COMMIT")):
+                steps.append(int(name.split("_", 1)[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(template: PyTree, directory: str,
+                       step: Optional[int] = None, *,
+                       sharding_fn: Optional[Callable[[str], Any]] = None
+                       ) -> PyTree:
+    """Restore into the structure of ``template``.  ``sharding_fn(key)``
+    may return a Sharding per leaf (elastic re-shard onto the current
+    mesh); None leaves it to JAX's default placement."""
+    step = latest_step(directory) if step is None else step
+    assert step is not None, f"no committed checkpoint under {directory}"
+    stepdir = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(stepdir, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    shard_cache: dict[str, Any] = {}
+
+    keys_tmpl = _flatten(template)
+    missing = set(keys_tmpl) - set(manifest)
+    extra = set(manifest) - set(keys_tmpl)
+    assert not missing, f"checkpoint missing leaves: {sorted(missing)[:5]}"
+    assert not extra, f"checkpoint has extra leaves: {sorted(extra)[:5]}"
+
+    out = {}
+    for key, tmpl_leaf in keys_tmpl.items():
+        meta = manifest[key]
+        if meta["shard"] not in shard_cache:
+            shard_cache[meta["shard"]] = np.load(
+                os.path.join(stepdir, meta["shard"]))
+        arr = _from_storable(shard_cache[meta["shard"]][key], meta["dtype"])
+        assert tuple(arr.shape) == tuple(tmpl_leaf.shape), \
+            (key, arr.shape, tmpl_leaf.shape)
+        sh = sharding_fn(key) if sharding_fn is not None else None
+        out[key] = (jax.device_put(arr, sh) if sh is not None
+                    else jax.numpy.asarray(arr).astype(tmpl_leaf.dtype))
+
+    # rebuild tree in template order
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    keys_in_order = list(keys_tmpl)
+    return jax.tree_util.tree_unflatten(
+        treedef, [out[k] for k in keys_in_order])
+
+
+class CheckpointManager:
+    """keep-last-k rotation + convenience save/restore for TrainState."""
+
+    def __init__(self, directory: str, keep: int = 3, n_shards: int = 4):
+        self.directory = directory
+        self.keep = keep
+        self.n_shards = n_shards
+        self._handles: list[SaveHandle] = []
+
+    def save(self, tree: PyTree, step: int, async_write: bool = True):
+        # one outstanding async save: a new snapshot waits for the previous
+        # write to commit (bounds host-memory staging and avoids GC races)
+        if self._handles:
+            self._handles[-1].wait()
+        h = save_checkpoint(tree, self.directory, step,
+                            n_shards=self.n_shards, async_write=async_write)
+        self._handles.append(h)
+        self._gc()
+        return h
+
+    def wait_all(self):
+        for h in self._handles:
+            h.wait()
+        self._handles.clear()
+        self._gc()          # async commits may land after save-time GC
+
+    def restore(self, template: PyTree, step: Optional[int] = None,
+                sharding_fn=None) -> PyTree:
+        return restore_checkpoint(template, self.directory, step,
+                                  sharding_fn=sharding_fn)
+
+    def _gc(self):
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            int(n.split("_", 1)[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.directory, n, "COMMIT")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

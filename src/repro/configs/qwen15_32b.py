@@ -1,0 +1,25 @@
+"""qwen1.5-32b — dense MHA (kv == q heads) with QKV bias [hf:Qwen/Qwen1.5-0.5B
+family scaling].
+
+40 heads on a 16-way ``model`` axis do not divide evenly; GSPMD pad-shards the
+head dim (40 -> ceil(40/16)*16 = 48 slots, 8 padded).  Documented in
+DESIGN.md §Arch-applicability.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen1.5-0.5B (family config, scaled per assignment)",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    activation="swiglu",
+    norm="rmsnorm",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    attention_class="quadratic",
+)

@@ -1,0 +1,11 @@
+"""LithOS control plane: the paper's contribution, as a composable library.
+
+Layers (DESIGN.md §2-3):
+  execution plane — real JAX models/kernels (repro.models, repro.kernels)
+  control plane   — scheduler/atomizer/rightsizer/DVFS/predictor (here)
+  timing plane    — calibrated discrete-event simulator (simulator.py)
+"""
+from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
+                              KernelWork, Priority, Quota)
+from repro.core.costmodel import CostModel
+from repro.core.lithos import SYSTEMS, evaluate, run_alone

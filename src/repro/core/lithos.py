@@ -1,0 +1,92 @@
+"""LithOS facade: wire apps, quotas, policies, and the simulator together.
+
+``evaluate(system, device, apps, ...)`` runs any of the nine systems
+(lithos + 8 baselines) over the same workload mix and returns a SimResult —
+the single entry point used by the benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace
+from typing import Optional
+
+from repro.core import baselines
+from repro.core.scheduler import LithOSConfig, LithOSScheduler
+from repro.core.simulator import Policy, SimResult, Simulator
+from repro.core.types import DeviceSpec, Priority, Quota
+from repro.core.workloads import AppSpec
+
+SYSTEMS = ("lithos", "mps", "mig", "limits", "timeslice", "priority",
+           "reef", "tgs", "orion")
+
+
+def quotas_from_apps(device: DeviceSpec,
+                     apps: list[AppSpec]) -> dict[int, Quota]:
+    """Derive per-client quotas: explicit quota_slices if given, else split
+    the device proportionally among HP apps (BE gets 0 — it runs on steal)."""
+    quotas: dict[int, Quota] = {}
+    hp = [i for i, a in enumerate(apps) if a.priority == Priority.HIGH]
+    explicit = sum(a.quota_slices for a in apps)
+    left = device.n_slices - explicit
+    for i, a in enumerate(apps):
+        s = a.quota_slices
+        if s == 0 and a.priority == Priority.HIGH and hp:
+            s = max(1, left // len(hp))
+        quotas[i] = Quota(s, a.priority)
+    return quotas
+
+
+def partitions_from_apps(device: DeviceSpec, apps: list[AppSpec],
+                         gpc_granularity: int = 0) -> dict[int, int]:
+    """MIG-style partitions: HP apps only, rounded to GPC boundaries."""
+    quotas = quotas_from_apps(device, apps)
+    parts = {}
+    for cid, q in quotas.items():
+        if apps[cid].priority != Priority.HIGH:
+            continue
+        s = q.slices
+        if gpc_granularity > 1:
+            s = max(gpc_granularity,
+                    int(math.floor(s / gpc_granularity)) * gpc_granularity)
+        parts[cid] = s
+    # MIG cannot oversubscribe: shrink to fit
+    total = sum(parts.values())
+    while total > device.n_slices and parts:
+        big = max(parts, key=parts.get)
+        parts[big] -= gpc_granularity if gpc_granularity > 1 else 1
+        total = sum(parts.values())
+    return parts
+
+
+def make_policy(system: str, device: DeviceSpec, apps: list[AppSpec], *,
+                lithos_config: Optional[LithOSConfig] = None) -> Policy:
+    if system == "lithos":
+        return LithOSScheduler(device, quotas_from_apps(device, apps),
+                               lithos_config or LithOSConfig())
+    if system == "mig":
+        return baselines.MIGPolicy(
+            partitions_from_apps(device, apps,
+                                 gpc_granularity=device.n_slices // 8))
+    if system == "limits":
+        return baselines.LimitsPolicy(partitions_from_apps(device, apps))
+    return baselines.make_baseline(system)
+
+
+def evaluate(system: str, device: DeviceSpec, apps: list[AppSpec], *,
+             horizon: float = 30.0, seed: int = 0,
+             lithos_config: Optional[LithOSConfig] = None) -> SimResult:
+    policy = make_policy(system, device, apps, lithos_config=lithos_config)
+    sim = Simulator(device, apps, policy, horizon=horizon, seed=seed)
+    res = sim.run()
+    res.policy = policy               # expose learned state to benchmarks
+    return res
+
+
+def run_alone(device: DeviceSpec, app: AppSpec, *, horizon: float = 30.0,
+              seed: int = 0, system: str = "lithos",
+              lithos_config: Optional[LithOSConfig] = None) -> SimResult:
+    """Solo run of one app — the normalization baseline the paper uses for
+    'ideal' latency and throughput-alone."""
+    solo = replace(app, quota_slices=device.n_slices)
+    return evaluate(system, device, [solo], horizon=horizon, seed=seed,
+                    lithos_config=lithos_config)

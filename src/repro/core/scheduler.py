@@ -1,0 +1,285 @@
+"""§4.3 TPC (core-slice) Scheduler — the LithOS policy.
+
+Manages the device's slices like an OS manages CPU cores:
+
+* **Quotas** (§4.2): each client is guaranteed its quota slices whenever it
+  has work.  Unowned slices form a shared pool.
+* **TPC Stealing**: slices owned by clients with *no pending work* are lent
+  out; per-slice timers (predicted completion of the holding atom, from the
+  §4.7 predictor) record when borrowed slices return.  The moment an owner
+  has work queued, its slices stop being re-lent — in-flight atoms finish
+  (bounded by atom_duration) and return.
+* **Kernel Atomization** (§4.4): long kernels are split so every atom
+  boundary is a reallocation/preemption point; head-of-line blocking is
+  bounded by one atom, not one kernel.
+* **Right-sizing** (§4.5) and **DVFS** (§4.6) hook in per-atom, inheriting
+  the parent kernel's decisions.
+
+Dispatch discipline: HP clients first; one atom in flight per queue (maximum
+scheduling flexibility — the sync-queue backlog threshold of the paper, set
+to its minimum); HP dispatches eagerly on whatever slices are free, BE only
+when it can get a meaningful allocation.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.atomizer import AtomizerConfig, KernelAtomizer
+from repro.core.dvfs import DVFSGovernor
+from repro.core.predictor import LatencyPredictor
+from repro.core.queues import Client
+from repro.core.rightsizer import RightSizer
+from repro.core.simulator import ExecKernel, Policy
+from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
+                              Priority, Quota)
+
+UNSEEN_DEFAULT_LATENCY = 2e-3     # conservative guess for never-seen kernels
+
+
+@dataclass
+class LithOSConfig:
+    atomize: bool = True
+    steal: bool = True
+    rightsize: bool = False
+    dvfs: bool = False
+    occupancy_filter: bool = True   # §4.5 filtering heuristic (always-on in
+                                    # LithOS; off = status-quo full alloc)
+    slip: float = 1.1               # latency-slip parameter k (§4.5/4.6)
+    probe_low: bool = True          # schedule the low-point calibration run
+    # 1-slice probes are the paper's protocol; for latency-critical (HP)
+    # kernels the low point is raised so one probe never exceeds this bound.
+    # BE kernels always probe at 1 slice (they have no deadline).
+    probe_latency_cap: float = 25e-3
+    be_min_fraction: float = 0.05   # BE dispatches only if it can get this
+    atomizer: AtomizerConfig = field(default_factory=AtomizerConfig)
+
+
+@dataclass
+class _QueueState:
+    parent: Optional[KernelTask] = None
+    atoms: deque = field(default_factory=deque)
+    in_flight_kid: Optional[int] = None
+    parent_slices: int = 0          # allocation decided for the kernel
+    predicted: Optional[float] = None
+
+
+class LithOSScheduler(Policy):
+    name = "lithos"
+
+    def __init__(self, device: DeviceSpec, quotas: dict[int, Quota],
+                 config: Optional[LithOSConfig] = None):
+        self.device = device
+        self.quotas = quotas
+        self.cfg = config or LithOSConfig()
+        self.predictor = LatencyPredictor(device.launch_overhead)
+        self.atomizer = KernelAtomizer(self.cfg.atomizer)
+        self.rightsizer = RightSizer(device.n_slices, device.occupancy,
+                                     self.cfg.slip)
+        self.governor = DVFSGovernor(device, self.cfg.slip)
+        # slice state
+        self.owner: list[Optional[int]] = [None] * device.n_slices
+        self.holder: list[Optional[int]] = [None] * device.n_slices  # kid
+        self.busy_until = [0.0] * device.n_slices
+        nxt = 0
+        for cid, q in sorted(quotas.items()):
+            for _ in range(q.slices):
+                if nxt < device.n_slices:
+                    self.owner[nxt] = cid
+                    nxt += 1
+        self.qstate: dict[int, _QueueState] = {}
+        self.stolen_slice_seconds = 0.0
+        self.pred_log: list[tuple[float, float, int]] = []  # (pred, act, prio)
+        self._grown: dict[int, int] = {}
+
+    # -- helpers ------------------------------------------------------------------
+
+    def _qs(self, cid: int) -> _QueueState:
+        return self.qstate.setdefault(cid, _QueueState())
+
+    def _has_work(self, c: Client) -> bool:
+        """A workload is idle (its slices lendable) only between jobs —
+        a client mid-request keeps its guarantee even while one of its
+        kernels is executing (otherwise every kernel boundary leaks the
+        quota to thieves and per-request latency compounds)."""
+        qs = self._qs(c.cid)
+        return (bool(qs.atoms) or c.peek() is not None or bool(c.pending)
+                or c.current is not None or c.outstanding > 0)
+
+    def _free_slices(self, for_cid: int, now: float) -> list[int]:
+        """Slice ids this client may use right now.
+
+        Lendability is priority-tiered (Fig 14's design point):
+        * HP borrowers take any idle slice — HP apps steal unused
+          resources from one another (an active owner's spare quota is
+          still covered by its guarantee: it reclaims at atom boundaries).
+        * BE borrowers only take slices of clients with NO in-flight job —
+          otherwise repeated 1-atom borrows shave every kernel of an
+          active HP request and the slowdown compounds through queueing.
+        """
+        own, pool, stealable = [], [], []
+        hp_borrower = (self.quotas.get(for_cid, Quota(0)).priority
+                       == Priority.HIGH)
+        for i in range(self.device.n_slices):
+            if self.holder[i] is not None:
+                continue
+            o = self.owner[i]
+            if o == for_cid:
+                own.append(i)
+            elif o is None:
+                pool.append(i)
+            elif self.cfg.steal:
+                oc = self.sim.clients[o]
+                if hp_borrower or not self._has_work(oc):
+                    stealable.append(i)
+        return own + pool + stealable
+
+    def _n_own_idle(self, cid: int) -> int:
+        return sum(1 for i in range(self.device.n_slices)
+                   if self.owner[i] == cid and self.holder[i] is None)
+
+    # -- planning -------------------------------------------------------------------
+
+    def _plan_kernel(self, c: Client, task: KernelTask, now: float):
+        qs = self._qs(c.cid)
+        # quota is a GUARANTEE (enforced via slice ownership + lendability),
+        # not a cap: any client may use the whole device when others idle
+        desired = self.device.n_slices
+        pred = self.predictor.predict(task, desired)
+        # right-sizing (with the occupancy filter always applied)
+        if self.cfg.rightsize:
+            prio = self.quotas.get(c.cid, Quota(0)).priority
+            cap = (self.cfg.probe_latency_cap
+                   if prio == Priority.HIGH else 1.0)
+            probe = (self.rightsizer.probe_allocation(
+                task, desired, predicted_full=pred, probe_latency_cap=cap)
+                if self.cfg.probe_low else None)
+            if probe is not None:
+                desired = probe        # calibration run (full, then 1 slice)
+            else:
+                desired = self.rightsizer.decide(task, desired)
+        elif self.cfg.occupancy_filter:
+            desired = min(desired, self.rightsizer.occupancy_bound(task))
+        # atomization; unseen BE kernels split by grid size (an unknown
+        # best-effort kernel must never monopolize stolen slices)
+        prio = self.quotas.get(c.cid, Quota(0)).priority
+        n_atoms = (self.atomizer.plan(
+            task, pred,
+            unseen_conservative=(prio == Priority.BEST_EFFORT))
+            if self.cfg.atomize else 1)
+        qs.parent = task
+        qs.parent_slices = max(1, desired)
+        qs.predicted = pred
+        qs.atoms = deque(self.atomizer.split(task, n_atoms))
+
+    # -- dispatch ---------------------------------------------------------------------
+
+    def _dispatch_atom(self, c: Client, now: float) -> bool:
+        qs = self._qs(c.cid)
+        if not qs.atoms or qs.in_flight_kid is not None:
+            return False
+        prio = self.quotas.get(c.cid, Quota(0)).priority
+        free = self._free_slices(c.cid, now)
+        if not free:
+            return False
+        want = min(qs.parent_slices, len(free))
+        if prio == Priority.BEST_EFFORT:
+            floor = max(1, int(qs.parent_slices * self.cfg.be_min_fraction))
+            if len(free) < floor:
+                return False
+        atom = qs.atoms.popleft()
+        chosen = tuple(free[:want])
+        stolen = any(self.owner[i] not in (c.cid, None) for i in chosen)
+        n_atoms = atom.atom_of[2] if atom.atom_of else 1
+        pred = self.predictor.predict(atom, want, self.governor.current_f,
+                                      n_atoms=n_atoms)
+        eta = pred if pred is not None else UNSEEN_DEFAULT_LATENCY
+        for i in chosen:
+            self.holder[i] = atom.kid
+            self.busy_until[i] = now + eta
+        ek = self.sim.start_kernel(c, atom, len(chosen), slice_set=chosen,
+                                   stolen=stolen)
+        qs.in_flight_kid = atom.kid
+        ek._predicted = pred          # for §7.4 accuracy accounting
+        return True
+
+    # -- policy hooks --------------------------------------------------------------------
+
+    def step(self, now: float):
+        # DVFS: conservative — only below f_max when nothing in flight is unseen
+        if self.cfg.dvfs:
+            unseen = any(self.governor.unseen(ek.task)
+                         for ek in self.sim.in_flight.values())
+            if unseen:
+                self.sim.set_frequency(1.0)
+                self.governor.current_f = self.sim.freq
+            else:
+                f = self.governor.maybe_switch(now)
+                if f is not None:
+                    self.sim.set_frequency(f)
+        order = sorted(
+            self.sim.clients,
+            key=lambda c: -int(self.quotas.get(c.cid, Quota(0)).priority))
+        for c in order:
+            qs = self._qs(c.cid)
+            if qs.parent is None:
+                task = c.peek()
+                if task is not None:
+                    c.pop()
+                    self._plan_kernel(c, task, now)
+            self._dispatch_atom(c, now)
+        self._grow_inflight(now)
+
+    def _grow_inflight(self, now: float):
+        """Spread freed slices onto running atoms (remaining thread blocks
+        flow onto freed cores — hardware-real growth, never shrink).
+        Priority order; each atom grows at most to its planned allocation."""
+        eks = sorted(self.sim.in_flight.values(),
+                     key=lambda e: (-int(self.quotas.get(
+                         e.client.cid, Quota(0)).priority), e.t_start))
+        for ek in eks:
+            qs = self._qs(ek.client.cid)
+            want = qs.parent_slices
+            if ek.slices >= want:
+                continue
+            free = self._free_slices(ek.client.cid, now)
+            take = tuple(free[:want - ek.slices])
+            if not take:
+                continue
+            for i in take:
+                self.holder[i] = ek.task.kid
+                self.busy_until[i] = max(self.busy_until[i], now)
+            ek.slice_set = tuple(ek.slice_set) + take
+            self._grown[ek.task.kid] = ek.slices + len(take)
+
+    def allocations(self, now: float) -> dict[int, int]:
+        out = {ek.task.kid: ek.slices for ek in self.sim.in_flight.values()}
+        out.update(self._grown)
+        self._grown = {}
+        return out
+
+    def on_complete(self, ek: ExecKernel, rec: CompletionRecord):
+        now = rec.t_end
+        self._grown.pop(ek.task.kid, None)
+        for i in ek.slice_set:
+            if self.holder[i] == ek.task.kid:
+                self.holder[i] = None
+                self.busy_until[i] = now
+        if ek.stolen:
+            self.stolen_slice_seconds += rec.latency * rec.slices
+        self.predictor.observe(rec)
+        self.rightsizer.observe(rec)
+        self.governor.observe(rec)
+        pred = getattr(ek, "_predicted", None)
+        if pred is not None:
+            prio = self.quotas.get(ek.client.cid, Quota(0)).priority
+            self.pred_log.append((pred, rec.latency, int(prio)))
+            self.predictor.record_outcome(pred, rec.latency)
+        qs = self._qs(ek.client.cid)
+        if qs.in_flight_kid == ek.task.kid:
+            qs.in_flight_kid = None
+        if not qs.atoms and qs.in_flight_kid is None:
+            qs.parent = None
+            ek.client.kernel_done(now)
+

@@ -1,0 +1,356 @@
+"""Calibrated discrete-event device simulator (the timing plane).
+
+Executes :class:`KernelTask`s on a :class:`DeviceSpec` under a pluggable
+scheduling :class:`Policy`.  Ground-truth latencies come from the roofline
+cost model; the OS components observe only :class:`CompletionRecord`s — they
+never see flops/bytes — so predictor / right-sizer / DVFS learn online
+exactly as on real hardware.
+
+Execution model (fluid DES): an in-flight kernel has a fixed *overhead*
+phase (launch/tail, wall time) followed by a *divisible* phase that drains at
+a rate set by its current slice allocation and the device frequency.  The
+policy's ``allocations()`` is re-evaluated at every event, so policies may
+space-partition (LithOS, MIG), processor-share (MPS), prioritize (Priority),
+gate (REEF/TGS/Orion), or time-slice.  Preemption support: ``kill()``
+requeues a kernel with all progress lost (REEF reset semantics).
+
+Energy: device power P = static + n*idle + busy*dyn*(f/fmax)^3 integrated
+between events.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.costmodel import CostModel, WorkPhases
+from repro.core.queues import Client
+from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
+                              Priority)
+from repro.core.workloads import AppSpec
+
+
+@dataclass
+class ExecKernel:
+    """An in-flight kernel/atom."""
+
+    task: KernelTask
+    client: Client
+    phases: WorkPhases
+    t_submit: float
+    t_start: float
+    overhead_left: float
+    div_left: float = 1.0               # fraction of divisible phase left
+    slices: int = 0
+    slice_set: tuple[int, ...] = ()
+    stolen: bool = False
+    gen: int = 0                        # event-invalidation counter
+
+    interference: float = 1.0           # speed factor (set by simulator)
+
+    def speed(self, f: float, occupancy: int) -> float:
+        """d(div_left)/dt at allocation ``slices`` and rel. frequency f."""
+        if self.slices <= 0:
+            return 0.0
+        t_div = self.phases.divisible_time(self.slices, f, occupancy)
+        return (self.interference / t_div) if t_div > 0 else float("inf")
+
+    def eta(self, f: float, occupancy: int) -> float:
+        if self.slices <= 0:
+            return float("inf")
+        sp = self.speed(f, occupancy)
+        div_t = self.div_left / sp if sp != float("inf") else 0.0
+        return self.overhead_left + div_t
+
+
+class Policy:
+    """Scheduling policy interface (subclassed by LithOS and baselines).
+
+    Slice allocations follow GPU block semantics: granted at dispatch, may
+    GROW mid-flight (remaining blocks spread onto freed slices) but never
+    shrink — running thread blocks are non-preemptible.  Policies that model
+    hardware context switching (TimeSlice) set ``allow_shrink``; REEF-style
+    reset preemption uses ``Simulator.kill`` instead.
+    """
+
+    name = "base"
+    tick_interval: float = 0.0          # >0: periodic on_tick callbacks
+    allow_shrink: bool = False
+    # Cross-tenant interference when kernels from multiple clients are
+    # co-resident (L2/HBM/scheduler contention — the cost of MPS-style
+    # stacking the paper's §2.2 describes).  Spatially isolating policies
+    # (LithOS, MIG) keep 0; MPS/Priority/TGS pay it.
+    interference_penalty: float = 0.0
+
+    def attach(self, sim: "Simulator"):
+        self.sim = sim
+
+    def step(self, now: float):
+        """Called after every event: examine queues, dispatch kernels."""
+        raise NotImplementedError
+
+    def allocations(self, now: float) -> dict[int, int]:
+        """kid -> slices for all in-flight kernels, re-evaluated per event.
+        Default: keep each kernel's current allocation."""
+        return {ek.task.kid: ek.slices for ek in self.sim.in_flight.values()}
+
+    def on_complete(self, ek: ExecKernel, rec: CompletionRecord):
+        pass
+
+    def on_tick(self, now: float):
+        pass
+
+
+class Simulator:
+    def __init__(self, device: DeviceSpec, apps: list[AppSpec],
+                 policy: Policy, *, horizon: float = 30.0, seed: int = 0):
+        self.device = device
+        self.cost = CostModel(device)
+        self.policy = policy
+        self.horizon = horizon
+        self.now = 0.0
+        self.freq = 1.0
+        self._pending_freq: Optional[float] = None
+        self.in_flight: dict[int, ExecKernel] = {}
+        self._heap: list[tuple[float, int, str, object]] = []
+        self._counter = itertools.count()
+        self.energy = 0.0
+        self.busy_slice_seconds = 0.0
+        self.records: list[CompletionRecord] = []
+        self.clients = [Client(i, a, horizon, seed=seed)
+                        for i, a in enumerate(apps)]
+        policy.attach(self)
+
+    # -- event plumbing ---------------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload: object = None):
+        heapq.heappush(self._heap, (t, next(self._counter), kind, payload))
+
+    def set_frequency(self, f: float):
+        """Request a frequency switch (takes f_switch_latency)."""
+        if abs(f - self.freq) < 1e-9 or self._pending_freq is not None:
+            return
+        self._pending_freq = f
+        self._push(self.now + self.device.f_switch_latency, "fswitch", f)
+
+    # -- dispatch interface (called by policies) ---------------------------------
+
+    def start_kernel(self, client: Client, task: KernelTask, slices: int,
+                     *, slice_set: tuple[int, ...] = (),
+                     stolen: bool = False, t_submit: Optional[float] = None
+                     ) -> ExecKernel:
+        phases = self.cost.phases(task.work)
+        ek = ExecKernel(task=task, client=client, phases=phases,
+                        t_submit=self.now if t_submit is None else t_submit,
+                        t_start=self.now,
+                        overhead_left=phases.overhead,
+                        slices=max(0, slices), slice_set=slice_set,
+                        stolen=stolen)
+        self.in_flight[task.kid] = ek
+        self._schedule_completion(ek)
+        return ek
+
+    def kill(self, kid: int) -> Optional[KernelTask]:
+        """REEF-style reset: drop an in-flight kernel, losing progress."""
+        ek = self.in_flight.pop(kid, None)
+        if ek is None:
+            return None
+        ek.gen += 1
+        return ek.task
+
+    def _schedule_completion(self, ek: ExecKernel):
+        ek.gen += 1
+        eta = ek.eta(self.freq, self.device.occupancy)
+        if eta != float("inf"):
+            self._push(self.now + eta, "complete", (ek.task.kid, ek.gen))
+
+    # -- state advance ------------------------------------------------------------
+
+    def _advance(self, t_new: float):
+        dt = t_new - self.now
+        if dt <= 0:
+            self.now = max(self.now, t_new)
+            return
+        busy = min(sum(min(ek.slices, ek.phases.max_useful_slices)
+                       for ek in self.in_flight.values()),
+                   self.device.n_slices)
+        self.energy += dt * self.device.power(busy, self.freq)
+        self.busy_slice_seconds += dt * busy
+        for ek in self.in_flight.values():
+            used = dt
+            if ek.overhead_left > 0:
+                o = min(ek.overhead_left, used)
+                ek.overhead_left -= o
+                used -= o
+            if used > 0 and ek.div_left > 0:
+                ek.div_left = max(
+                    0.0, ek.div_left - used * ek.speed(self.freq,
+                                                       self.device.occupancy))
+            # capacity accounting: slices HELD (denied to other tenants),
+            # not just usefully busy — right-sizing savings live here
+            ek.client.slice_seconds += dt * ek.slices
+        self.now = t_new
+
+    def _apply_allocations(self):
+        alloc = self.policy.allocations(self.now)
+        # interference: multiple tenants co-resident slow everyone down
+        pen = self.policy.interference_penalty
+        n_tenants = len({ek.client.cid for ek in self.in_flight.values()})
+        factor = max(0.3, 1.0 - pen * (n_tenants - 1)) if pen else 1.0
+        changed = []
+        for kid, ek in self.in_flight.items():
+            s = max(0, alloc.get(kid, ek.slices))
+            if not self.policy.allow_shrink:
+                s = max(s, ek.slices)      # blocks are non-preemptible
+            if s != ek.slices or abs(factor - ek.interference) > 1e-9:
+                ek.slices = s
+                ek.interference = factor
+                changed.append(ek)
+        for ek in changed:
+            self._schedule_completion(ek)
+        return changed
+
+    def held_slices(self) -> int:
+        return sum(ek.slices for ek in self.in_flight.values())
+
+    def free_slices(self) -> int:
+        return max(0, self.device.n_slices - self.held_slices())
+
+    def _complete(self, ek: ExecKernel):
+        del self.in_flight[ek.task.kid]
+        rec = CompletionRecord(task=ek.task, t_submit=ek.t_submit,
+                               t_start=ek.t_start, t_end=self.now,
+                               slices=ek.slices, freq=self.freq)
+        self.records.append(rec)
+        self.policy.on_complete(ek, rec)
+
+    # -- main loop ------------------------------------------------------------------
+
+    def run(self) -> "SimResult":
+        for c in self.clients:
+            for t in c.arrivals():
+                self._push(t, "arrival", c.cid)
+            if c.closed_loop:
+                self._push(0.0, "arrival", c.cid)
+        if self.policy.tick_interval > 0:
+            self._push(self.policy.tick_interval, "tick", None)
+        self._push(self.horizon, "end", None)
+
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if t > self.horizon and kind != "end":
+                continue
+            self._advance(t)
+            if kind == "end":
+                break
+            if kind == "arrival":
+                c = self.clients[payload]
+                if c.spec.kind != "train":
+                    c.pending.append(c.make_job(self.now))
+                c.start_next_job(self.now)
+            elif kind == "complete":
+                kid, gen = payload
+                ek = self.in_flight.get(kid)
+                if ek is None or ek.gen != gen:
+                    continue
+                if ek.overhead_left > 1e-12 or ek.div_left > 1e-9:
+                    self._schedule_completion(ek)   # stale estimate; refresh
+                    continue
+                self._complete(ek)
+            elif kind == "fswitch":
+                self.freq = payload
+                self._pending_freq = None
+                for ek in self.in_flight.values():
+                    self._schedule_completion(ek)
+            elif kind == "tick":
+                self.policy.on_tick(self.now)
+                self._push(self.now + self.policy.tick_interval, "tick", None)
+            # policy reacts to the new state (apply first so context
+            # switches / grows take effect before dispatch decisions)
+            self._apply_allocations()
+            self.policy.step(self.now)
+            for c in self.clients:
+                c.start_next_job(self.now)
+            self.policy.step(self.now)
+            self._apply_allocations()
+        return SimResult(self)
+
+
+@dataclass
+class ClientMetrics:
+    name: str
+    priority: Priority
+    n_completed: int
+    throughput: float
+    latencies: list[float]
+    slice_seconds: float
+    arrivals: list[float] = None
+    horizon: float = 0.0
+
+    def _lat(self, warmup: float = 0.0) -> list[float]:
+        if warmup <= 0 or not self.arrivals:
+            return self.latencies
+        t0 = warmup * self.horizon
+        out = [l for a, l in zip(self.arrivals, self.latencies) if a >= t0]
+        return out or self.latencies
+
+    def p(self, q: float, warmup: float = 0.0) -> float:
+        lat = self._lat(warmup)
+        if not lat:
+            return float("nan")
+        return float(np.percentile(lat, q))
+
+    @property
+    def p50(self):
+        return self.p(50)
+
+    @property
+    def p95(self):
+        return self.p(95)
+
+    @property
+    def p99(self):
+        return self.p(99)
+
+    def slo_attainment(self, slo: float) -> float:
+        if not self.latencies or slo <= 0:
+            return float("nan")
+        return float(np.mean([l <= slo for l in self.latencies]))
+
+    def goodput(self, slo: float, horizon: float) -> float:
+        if slo <= 0:
+            return self.throughput
+        return sum(l <= slo for l in self.latencies) / horizon
+
+
+class SimResult:
+    def __init__(self, sim: Simulator):
+        self.device = sim.device
+        self.horizon = sim.horizon
+        self.energy = sim.energy
+        self.busy_slice_seconds = sim.busy_slice_seconds
+        self.records = sim.records
+        self.policy_name = sim.policy.name
+        self.clients = [ClientMetrics(
+            name=c.spec.name, priority=c.spec.priority,
+            n_completed=len(c.completed),
+            throughput=c.throughput(sim.horizon),
+            latencies=c.latencies(), slice_seconds=c.slice_seconds,
+            arrivals=[j.arrival for j in c.completed], horizon=sim.horizon)
+            for c in sim.clients]
+
+    @property
+    def utilization(self) -> float:
+        return self.busy_slice_seconds / (self.horizon * self.device.n_slices)
+
+    def client(self, name: str) -> ClientMetrics:
+        return next(c for c in self.clients if c.name == name)
+
+
+def run_sim(device: DeviceSpec, apps: list[AppSpec], policy: Policy, *,
+            horizon: float = 30.0, seed: int = 0) -> SimResult:
+    return Simulator(device, apps, policy, horizon=horizon, seed=seed).run()

@@ -1,0 +1,165 @@
+"""Core types for the LithOS control plane.
+
+The control plane schedules *kernels* — opaque units of device work described
+by the quantities a driver-level interposer can observe (grid size, launch
+config) plus the ground-truth work terms (flops / HBM bytes) that only the
+simulator's cost model sees.  The OS never reads ``flops``/``bytes`` directly;
+it learns latencies online through the observation interface (§4.7).
+
+GPU -> TPU mapping (DESIGN.md §2): the schedulable spatial unit is a
+*core-slice* (one TPU chip/core of the pod-slice a host manages), standing in
+for the paper's TPC.  All scheduler math is granularity-agnostic.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from enum import IntEnum
+from typing import Optional
+
+
+class Priority(IntEnum):
+    BEST_EFFORT = 0
+    HIGH = 1
+
+
+@dataclass(frozen=True)
+class DeviceSpec:
+    """A schedulable device: a pod-slice of ``n_slices`` core-slices.
+
+    Constants default to the TPU v5e numbers used throughout the roofline
+    analysis (197 TFLOP/s bf16, 819 GB/s HBM per chip).  ``f_states`` are the
+    supported frequency steps as fractions of f_max, mirroring a discrete
+    DVFS ladder; ``f_switch_latency`` models the ~50 ms transition cost the
+    paper measures on current hardware (§4.6).
+    """
+
+    n_slices: int = 64
+    peak_flops: float = 197e12          # per slice, bf16
+    hbm_bw: float = 819e9               # per slice, bytes/s
+    occupancy: int = 8                  # blocks resident per slice
+    launch_overhead: float = 4e-6       # per kernel/atom dispatch, seconds
+    # dense DVFS ladder (real GPUs step ~15 MHz; 2.5% of f_max here)
+    f_states: tuple[float, ...] = tuple(
+        round(0.40 + 0.025 * i, 3) for i in range(25))
+    f_switch_latency: float = 50e-3
+    # Power model per slice (watts): P = idle + dyn * (f/fmax)^3 * active
+    p_idle: float = 60.0
+    p_dyn: float = 140.0
+    p_static_host: float = 120.0        # host/uncore, per device
+
+    def power(self, active_slices: int, f: float) -> float:
+        """Instantaneous device power draw (W)."""
+        return (self.p_static_host
+                + self.n_slices * self.p_idle
+                + active_slices * self.p_dyn * (f ** 3))
+
+    @classmethod
+    def tpu_v5e_pod_slice(cls, n_chips: int = 64) -> "DeviceSpec":
+        """TPU-native profile: schedulable unit = one v5e chip."""
+        return cls(n_slices=n_chips)
+
+    @classmethod
+    def a100_like(cls) -> "DeviceSpec":
+        """Paper-testbed-calibrated profile: one A100 (SXM4, 108 SMs = 54
+        TPCs, 312 TFLOP/s bf16, 1.94 TB/s HBM, ~400 W TDP).  Used by the
+        scheduling benchmarks so Table 1/2 batch sizes and Fig 10 kernel
+        latencies land in the paper's regimes; the TPU profile is used by
+        everything roofline-facing."""
+        # power: ~60 W idle -> ~400 W loaded, 85% dynamic (A100 SXM4)
+        return cls(n_slices=54,
+                   peak_flops=312e12 / 54,
+                   hbm_bw=1.94e12 / 54,
+                   occupancy=8,
+                   launch_overhead=4e-6,
+                   p_idle=0.4, p_dyn=6.3, p_static_host=40.0)
+
+
+_kernel_ids = itertools.count()
+
+
+@dataclass
+class KernelWork:
+    """Ground-truth work terms (cost-model facts, hidden from the OS).
+
+    ``flops``     total floating-point work
+    ``bytes``     total HBM traffic
+    ``n_blocks``  grid size (schedulable tiles — the atomizer's unit)
+    """
+
+    flops: float
+    bytes: float
+    n_blocks: int
+
+    def scaled(self, frac: float) -> "KernelWork":
+        nb = max(1, round(self.n_blocks * frac))
+        return KernelWork(self.flops * frac, self.bytes * frac, nb)
+
+
+@dataclass
+class KernelTask:
+    """One kernel launch as seen at the interposition boundary.
+
+    ``op_name``/``ordinal`` identify the operator node in the model's DFG:
+    the predictor keys on (queue, ordinal) because a single kernel function
+    serves layers with different tensor sizes (§4.7).
+    """
+
+    op_name: str
+    work: KernelWork
+    client_id: int = 0
+    queue_id: int = 0
+    ordinal: int = -1                   # k-th kernel since last sync event
+    kid: int = field(default_factory=lambda: next(_kernel_ids))
+    # Set by the atomizer: (parent kid, atom index, n_atoms).
+    atom_of: Optional[tuple[int, int, int]] = None
+
+    @property
+    def is_atom(self) -> bool:
+        return self.atom_of is not None
+
+    def key(self) -> tuple[int, int]:
+        """Predictor identity: operator node = (queue, ordinal)."""
+        return (self.queue_id, self.ordinal)
+
+
+@dataclass
+class SyncEvent:
+    """Explicit synchronization (cuStreamSynchronize analogue).
+
+    Delimits batches for the predictor's ordinal indexing and is the point
+    where the client blocks until its outstanding work completes.
+    """
+
+    client_id: int
+    queue_id: int
+
+
+@dataclass
+class Quota:
+    """Per-client compute quota: guaranteed core-slices when work is
+    available (§4.2), plus scheduling priority."""
+
+    slices: int
+    priority: Priority = Priority.BEST_EFFORT
+
+
+@dataclass
+class CompletionRecord:
+    """What the OS observes when a kernel/atom completes — the only channel
+    through which predictor / right-sizer / DVFS learn."""
+
+    task: KernelTask
+    t_submit: float
+    t_start: float
+    t_end: float
+    slices: int
+    freq: float                         # fraction of f_max during execution
+
+    @property
+    def latency(self) -> float:
+        return self.t_end - self.t_start
+
+    @property
+    def queueing(self) -> float:
+        return self.t_start - self.t_submit

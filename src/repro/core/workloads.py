@@ -1,0 +1,358 @@
+"""Arch-config -> kernel-trace compiler + workload (client) specifications.
+
+LithOS schedules opaque kernels; this module produces the kernel sequences a
+driver-level interposer would observe when one of the assigned architectures
+runs a training step / inference request.  Per-op FLOPs and HBM bytes are
+derived analytically from the *real* architecture configs (the same ones the
+JAX execution plane lowers), so the simulator's ground truth is parameterized
+from first principles rather than fitted to the paper's curves.
+
+Granularity: ``fusion`` controls how many consecutive ops share one kernel,
+mirroring the difference between eager per-op launches (PyTorch) and fused
+runtimes (TensorRT-LLM).  Fig-10-style long kernels arise naturally from big
+batches / long prompts.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.types import KernelWork, Priority
+
+DSIZE = 2               # bf16
+TILE_M = TILE_N = 128   # matmul output tile per thread block
+EW_TILE = 8192          # elements per elementwise block
+
+
+@dataclass(frozen=True)
+class OpDesc:
+    """One operator-level kernel: name + ground-truth work terms."""
+
+    name: str
+    flops: float
+    bytes: float
+    n_blocks: int
+
+    def work(self) -> KernelWork:
+        return KernelWork(self.flops, self.bytes, self.n_blocks)
+
+
+def matmul_op(name: str, M: int, N: int, K: int, dsize: int = DSIZE) -> OpDesc:
+    flops = 2.0 * M * N * K
+    byts = float(dsize) * (M * K + K * N + M * N)
+    blocks = math.ceil(M / TILE_M) * math.ceil(N / TILE_N)
+    return OpDesc(name, flops, byts, max(1, blocks))
+
+
+def ew_op(name: str, elems: float, *, streams: float = 3.0,
+          flops_per_elem: float = 4.0, dsize: int = DSIZE) -> OpDesc:
+    """Elementwise/normalization kernel: ``streams`` HBM passes over elems."""
+    return OpDesc(name, flops_per_elem * elems, streams * elems * dsize,
+                  max(1, math.ceil(elems / EW_TILE)))
+
+
+def attention_op(name: str, B: int, Sq: int, Skv: int, n_q: int, n_kv: int,
+                 hd: int, *, causal: bool, window: int = 0,
+                 block_q: int = 512) -> OpDesc:
+    if window:
+        Skv_eff = min(Skv, window)
+        causal_frac = 1.0
+    else:
+        Skv_eff = Skv
+        causal_frac = 0.5 if (causal and Sq == Skv) else 1.0
+    flops = 2.0 * 2.0 * B * n_q * Sq * Skv_eff * hd * causal_frac
+    byts = DSIZE * B * (Sq * n_q * hd * 2 + Skv_eff * n_kv * hd * 2)
+    blocks = B * n_q * math.ceil(Sq / block_q)
+    return OpDesc(name, flops, byts, max(1, blocks))
+
+
+def decode_attention_op(name: str, B: int, kv_len: int, n_q: int, n_kv: int,
+                        hd: int, window: int = 0) -> OpDesc:
+    """One-token attention against a KV cache — memory-bound by design."""
+    kv_eff = min(kv_len, window) if window else kv_len
+    flops = 2.0 * 2.0 * B * n_q * kv_eff * hd
+    byts = DSIZE * B * kv_eff * n_kv * hd * 2 + DSIZE * B * n_q * hd * 2
+    blocks = B * n_kv * max(1, math.ceil(kv_eff / 2048))
+    return OpDesc(name, flops, byts, max(1, blocks))
+
+
+# ---------------------------------------------------------------------------
+# Per-block op sequences (forward)
+# ---------------------------------------------------------------------------
+
+def _mlp_ops(cfg: ArchConfig, T: int, tag: str) -> list[OpDesc]:
+    d = cfg.d_model
+    if cfg.moe is not None:
+        m = cfg.moe
+        ops = [matmul_op(f"{tag}.router", T, m.n_experts, d),
+               ew_op(f"{tag}.dispatch", T * d, streams=4.0, flops_per_elem=1.0)]
+        # routed experts as one grouped matmul over T*top_k tokens
+        Tk = T * m.top_k
+        ops += [matmul_op(f"{tag}.exp_wi", Tk, m.expert_d_ff, d),
+                matmul_op(f"{tag}.exp_wg", Tk, m.expert_d_ff, d),
+                ew_op(f"{tag}.exp_act", Tk * m.expert_d_ff, streams=3.0),
+                matmul_op(f"{tag}.exp_wo", Tk, d, m.expert_d_ff),
+                ew_op(f"{tag}.combine", T * d * m.top_k, streams=3.0,
+                      flops_per_elem=2.0)]
+        if m.n_shared_experts:
+            ff = m.shared_d_ff * m.n_shared_experts
+            ops += [matmul_op(f"{tag}.shared_wi", T, ff, d),
+                    matmul_op(f"{tag}.shared_wg", T, ff, d),
+                    matmul_op(f"{tag}.shared_wo", T, d, ff)]
+        return ops
+    glu = cfg.activation in ("swiglu", "geglu")
+    ops = [matmul_op(f"{tag}.mlp_wi", T, cfg.d_ff, d)]
+    if glu:
+        ops.append(matmul_op(f"{tag}.mlp_wg", T, cfg.d_ff, d))
+    ops.append(ew_op(f"{tag}.mlp_act", T * cfg.d_ff, streams=3.0 if glu else 2.0))
+    ops.append(matmul_op(f"{tag}.mlp_wo", T, d, cfg.d_ff))
+    return ops
+
+
+def _attn_block_ops(cfg: ArchConfig, B: int, S: int, tag: str, *,
+                    window: int = 0, kv_len: Optional[int] = None,
+                    decode: bool = False) -> list[OpDesc]:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    T = B * S
+    ops = [ew_op(f"{tag}.ln1", T * d),
+           matmul_op(f"{tag}.qkv", T, (nq + 2 * nkv) * hd, d),
+           ew_op(f"{tag}.rope", T * (nq + nkv) * hd, streams=2.0)]
+    if decode:
+        ops.append(decode_attention_op(
+            f"{tag}.attn_dec", B, kv_len or S, nq, nkv, hd, window))
+    else:
+        ops.append(attention_op(f"{tag}.attn", B, S, kv_len or S, nq, nkv, hd,
+                                causal=True, window=window))
+    ops.append(matmul_op(f"{tag}.wo", T, d, nq * hd))
+    ops.append(ew_op(f"{tag}.ln2", T * d))
+    ops += _mlp_ops(cfg, T, tag)
+    return ops
+
+
+def _rec_block_ops(cfg: ArchConfig, B: int, S: int, tag: str,
+                   decode: bool = False) -> list[OpDesc]:
+    """RG-LRU block (RecurrentGemma): projections + conv + linear scan."""
+    d = cfg.d_model
+    w = cfg.hybrid.lru_width or d
+    T = B * S
+    ops = [ew_op(f"{tag}.ln1", T * d),
+           matmul_op(f"{tag}.rec_in", T, 2 * w, d),
+           ew_op(f"{tag}.conv1d", T * w, streams=3.0,
+                 flops_per_elem=2.0 * cfg.hybrid.conv_width),
+           # the recurrence: memory-bound scan over the sequence
+           ew_op(f"{tag}.lru_scan", T * w, streams=4.0, flops_per_elem=8.0),
+           matmul_op(f"{tag}.rec_out", T, d, w),
+           ew_op(f"{tag}.ln2", T * d)]
+    ops += _mlp_ops(cfg, T, tag)
+    return ops
+
+
+def _mlstm_block_ops(cfg: ArchConfig, B: int, S: int, tag: str,
+                     decode: bool = False) -> list[OpDesc]:
+    d = cfg.d_model
+    di = 2 * d                      # expansion
+    hd = di // cfg.n_heads
+    T = B * S
+    chunk = 256 if not decode else 1
+    ops = [ew_op(f"{tag}.ln1", T * d),
+           matmul_op(f"{tag}.up", T, 2 * di, d),
+           ew_op(f"{tag}.conv1d", T * di, streams=3.0, flops_per_elem=8.0),
+           matmul_op(f"{tag}.qkv", T, 3 * di, di)]
+    if decode:
+        # recurrent state update: read/write C [B,H,hd,hd]
+        state = B * cfg.n_heads * hd * hd
+        ops.append(ew_op(f"{tag}.mlstm_step", state, streams=3.0,
+                         flops_per_elem=6.0))
+    else:
+        # chunked parallel form: intra-chunk attention + inter-chunk state
+        nchunk = math.ceil(S / chunk)
+        intra = 2.0 * 2.0 * B * cfg.n_heads * nchunk * chunk * chunk * hd * 0.5
+        inter = 4.0 * B * cfg.n_heads * nchunk * hd * hd * chunk
+        byts = DSIZE * (3 * T * di + B * cfg.n_heads * nchunk * hd * hd * 2)
+        blocks = B * cfg.n_heads * nchunk
+        ops.append(OpDesc(f"{tag}.mlstm_chunk", intra + inter, byts,
+                          max(1, blocks)))
+    ops.append(matmul_op(f"{tag}.down", T, d, di))
+    return ops
+
+
+def _slstm_block_ops(cfg: ArchConfig, B: int, S: int, tag: str,
+                     decode: bool = False) -> list[OpDesc]:
+    d = cfg.d_model
+    T = B * S
+    ops = [ew_op(f"{tag}.ln1", T * d),
+           matmul_op(f"{tag}.gates", T, 4 * d, d),
+           # strictly sequential recurrence: S serial steps of B*d work;
+           # expressed as a low-parallelism kernel (few blocks)
+           OpDesc(f"{tag}.slstm_scan", 10.0 * T * d, 6.0 * T * d * DSIZE,
+                  max(1, B * cfg.n_heads // 4)),
+           matmul_op(f"{tag}.ffn_wi", T, cfg.d_ff or 4 * d, d),
+           matmul_op(f"{tag}.ffn_wo", T, d, cfg.d_ff or 4 * d)]
+    return ops
+
+
+_BLOCK_OPS = {"attn": _attn_block_ops, "rec": _rec_block_ops,
+              "mlstm": _mlstm_block_ops, "slstm": _slstm_block_ops}
+
+
+def _pattern(cfg: ArchConfig) -> tuple[str, ...]:
+    return cfg.hybrid.pattern if cfg.hybrid is not None else ("attn",)
+
+
+def _block_ops(cfg, kind, B, S, tag, **kw):
+    if kind == "attn":
+        window = cfg.hybrid.window if cfg.hybrid is not None else 0
+        return _attn_block_ops(cfg, B, S, tag, window=window, **kw)
+    kw.pop("kv_len", None)
+    return _BLOCK_OPS[kind](cfg, B, S, tag, decode=kw.get("decode", False))
+
+
+# ---------------------------------------------------------------------------
+# Whole-step traces
+# ---------------------------------------------------------------------------
+
+def forward_trace(cfg: ArchConfig, B: int, S: int, *,
+                  with_head: bool = True) -> list[OpDesc]:
+    T = B * S
+    d = cfg.d_model
+    ops = [ew_op("embed", T * d, streams=2.0, flops_per_elem=0.0)]
+    pat = _pattern(cfg)
+    for li in range(cfg.n_layers):
+        kind = pat[li % len(pat)]
+        ops += _block_ops(cfg, kind, B, S, f"L{li}.{kind}")
+    ops.append(ew_op("final_norm", T * d))
+    if with_head:
+        ops.append(matmul_op("lm_head", T, cfg.vocab_size, d))
+        ops.append(ew_op("softmax_xent", T * 8, streams=2.0, flops_per_elem=8.0))
+    if cfg.is_encoder_decoder:
+        # encoder stack over source frames + per-layer cross-attention
+        Se = cfg.max_source_positions
+        Te = B * Se
+        for li in range(cfg.n_encoder_layers):
+            ops += _attn_block_ops(cfg, B, Se, f"E{li}.attn")
+        for li in range(cfg.n_layers):
+            ops.append(attention_op(f"L{li}.xattn", B, S, Se, cfg.n_heads,
+                                    cfg.n_heads, cfg.head_dim, causal=False))
+    return ops
+
+
+def train_step_trace(cfg: ArchConfig, B: int, S: int) -> list[OpDesc]:
+    """fwd + bwd (2x matmul work as dgrad+wgrad) + optimizer update."""
+    fwd = forward_trace(cfg, B, S)
+    ops = list(fwd)
+    for op in reversed(fwd):
+        if ".attn" in op.name and "dec" not in op.name:
+            ops.append(replace(op, name=op.name + ".bwd", flops=op.flops * 2.5,
+                               bytes=op.bytes * 2.0))
+        elif op.flops >= op.bytes:  # matmul-like: dgrad + wgrad
+            ops.append(replace(op, name=op.name + ".dgrad"))
+            ops.append(replace(op, name=op.name + ".wgrad"))
+        else:
+            ops.append(replace(op, name=op.name + ".bwd"))
+    n_params = cfg.param_count()
+    # grad reduce + AdamW update: read p,g,m,v write p,m,v
+    ops.append(ew_op("optimizer", float(n_params), streams=6.0,
+                     flops_per_elem=12.0))
+    return ops
+
+
+def prefill_trace(cfg: ArchConfig, B: int, S: int) -> list[OpDesc]:
+    ops = forward_trace(cfg, B, S, with_head=False)
+    ops.append(matmul_op("lm_head_last", B, cfg.vocab_size, cfg.d_model))
+    return ops
+
+
+def decode_step_trace(cfg: ArchConfig, B: int, kv_len: int) -> list[OpDesc]:
+    d = cfg.d_model
+    ops = [ew_op("embed", B * d, streams=2.0, flops_per_elem=0.0)]
+    pat = _pattern(cfg)
+    for li in range(cfg.n_layers):
+        kind = pat[li % len(pat)]
+        ops += _block_ops(cfg, kind, B, 1, f"L{li}.{kind}",
+                          kv_len=kv_len, decode=True)
+    ops.append(ew_op("final_norm", B * d))
+    ops.append(matmul_op("lm_head", B, cfg.vocab_size, d))
+    return ops
+
+
+def fuse_trace(ops: list[OpDesc], group: int) -> list[OpDesc]:
+    """Fuse consecutive ops ``group`` at a time (runtime-fused kernels)."""
+    if group <= 1:
+        return ops
+    out = []
+    for i in range(0, len(ops), group):
+        g = ops[i:i + group]
+        out.append(OpDesc(
+            g[0].name + f"+f{len(g)}",
+            sum(o.flops for o in g), sum(o.bytes for o in g),
+            max(o.n_blocks for o in g)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Client workload specs (what the simulator's clients replay)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AppSpec:
+    """One tenant: a model + load pattern + SLO + quota/priority."""
+
+    name: str
+    cfg: ArchConfig
+    kind: str                       # "llm_infer" | "fwd_infer" | "train"
+    priority: Priority = Priority.BEST_EFFORT
+    quota_slices: int = 0
+    # open-loop inference load
+    rps: float = 0.0
+    slo_latency: float = 0.0        # seconds; 0 => throughput-oriented
+    batch: int = 1
+    prompt_mix: tuple[tuple[int, float], ...] = ((512, 0.6), (2048, 0.3),
+                                                 (8192, 0.1))
+    decode_tokens: int = 32
+    # train load (closed loop)
+    train_batch: int = 8
+    train_seq: int = 2048
+    fusion: int = 6                 # ops fused per kernel in the trace
+    seed: int = 0
+
+    def job_trace(self, rng: np.random.Generator) -> list[OpDesc]:
+        """One request (inference) or one step (training) as fused kernels."""
+        if self.kind == "train":
+            t = train_step_trace(self.cfg, self.train_batch, self.train_seq)
+            return fuse_trace(t, self.fusion)
+        lens, probs = zip(*self.prompt_mix)
+        S = int(rng.choice(lens, p=np.array(probs) / sum(probs)))
+        if self.kind == "fwd_infer":
+            return fuse_trace(prefill_trace(self.cfg, self.batch, S), self.fusion)
+        n_out = max(1, int(rng.geometric(1.0 / self.decode_tokens)))
+        n_out = min(n_out, 4 * self.decode_tokens)
+        ops = prefill_trace(self.cfg, self.batch, S)
+        step = decode_step_trace(self.cfg, self.batch, S + n_out // 2)
+        for _ in range(n_out):
+            ops += step
+        return fuse_trace(ops, self.fusion)
+
+    def arrivals(self, horizon: float, rng: np.random.Generator) -> list[float]:
+        if self.kind == "train" or self.rps <= 0:
+            return []               # closed loop
+        n = rng.poisson(self.rps * horizon)
+        return sorted(rng.uniform(0.0, horizon, n).tolist())
+
+
+def mean_demand(spec: AppSpec, device, n_samples: int = 5,
+                seed: int = 0) -> float:
+    """Mean full-device service seconds per job — used to calibrate Poisson
+    loads to a target utilization (the paper tunes loads for ~80% HP util)."""
+    from repro.core.costmodel import CostModel
+    cost = CostModel(device)
+    rng = np.random.default_rng((seed, spec.seed))
+    tot = 0.0
+    for _ in range(n_samples):
+        for op in spec.job_trace(rng):
+            tot += cost.latency(op.work(), device.n_slices)
+    return tot / n_samples

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, SyntheticLM, make_batch_specs,
+                                 sharded_batches)

@@ -1,0 +1,3 @@
+from repro.distributed.coordinator import (Coordinator, CoordinatorConfig,
+                                           HostState)
+from repro.distributed.elastic import elastic_mesh_shapes, shrink_mesh

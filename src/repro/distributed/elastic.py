@@ -1,0 +1,61 @@
+"""Elastic mesh management: shrink/grow the data axis on host failure.
+
+Model-parallel shards are the unit of survival: losing a host removes one
+or more full data-parallel replicas (the ``model`` axis must stay intact, so
+we drop the whole data rows containing failed hosts).  ``shrink_mesh``
+computes the largest valid mesh from the surviving device set; the driver
+then restores the latest checkpoint onto the new mesh (checkpoint/ is
+mesh-independent) and resumes.
+
+On real pods the device set comes from ``jax.devices()`` after the runtime
+re-initializes; in tests we pass explicit device lists.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def elastic_mesh_shapes(n_devices: int, model_parallel: int,
+                        pods: int = 1) -> Optional[tuple[int, ...]]:
+    """Largest (pod, data, model) / (data, model) shape fitting n_devices.
+
+    The model axis is fixed (parameter shards must stay whole); the data
+    axis absorbs the loss.  Returns None if not even one replica fits.
+    """
+    per_pod = n_devices // pods
+    data = per_pod // model_parallel
+    if data < 1:
+        return None
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def shrink_mesh(devices: Sequence, model_parallel: int,
+                axis_names: tuple[str, ...] = ("data", "model")
+                ) -> Optional[Mesh]:
+    """Build the largest valid mesh from surviving devices.
+
+    Drops the remainder so every data row has a full ``model_parallel``
+    worth of devices."""
+    n = len(devices)
+    data = n // model_parallel
+    if data < 1:
+        return None
+    usable = np.array(devices[:data * model_parallel]).reshape(
+        data, model_parallel)
+    return Mesh(usable, axis_names)
+
+
+def survivors(devices: Sequence, failed_hosts: Sequence[int],
+              devices_per_host: int) -> list:
+    """Device list with failed hosts' devices removed (host h owns the
+    contiguous block [h*dph, (h+1)*dph))."""
+    failed = set(failed_hosts)
+    return [d for i, d in enumerate(devices)
+            if i // devices_per_host not in failed]

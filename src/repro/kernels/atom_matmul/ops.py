@@ -1,0 +1,62 @@
+"""jit'd wrappers: full matmul as a schedule of atoms.
+
+``atom_matmul`` is the public op.  It pads operands to tile multiples, splits
+the output tile space into ``n_atoms`` contiguous ranges (the schedule a
+LithOS dispatcher would emit), executes them in the given order, and unpads.
+With ``n_atoms=1`` it is a plain tiled Pallas matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.atom_matmul.kernel import matmul_atom, tile_count
+
+
+def atom_ranges(total_tiles: int, n_atoms: int) -> list[tuple[int, int]]:
+    """Split [0, total) into n contiguous (start, len) ranges (len may differ
+    by 1) — the atomizer's default schedule."""
+    n_atoms = max(1, min(n_atoms, total_tiles))
+    base, rem = divmod(total_tiles, n_atoms)
+    out, start = [], 0
+    for i in range(n_atoms):
+        ln = base + (1 if i < rem else 0)
+        out.append((start, ln))
+        start += ln
+    return out
+
+
+def _pad2(x, m0, m1):
+    p0, p1 = (-x.shape[0]) % m0, (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_atoms", "block_m", "block_n", "block_k", "interpret", "order"))
+def atom_matmul(a: jax.Array, b: jax.Array, *, n_atoms: int = 1,
+                block_m: int = 256, block_n: int = 256, block_k: int = 256,
+                interpret: bool = False, order: tuple[int, ...] = ()) -> jax.Array:
+    """``a @ b`` computed as ``n_atoms`` independently scheduled atoms.
+
+    ``order`` optionally permutes atom execution (scheduling is order-free
+    because atom tile ranges are disjoint — property-tested).
+    """
+    M, N = a.shape[0], b.shape[1]
+    ap = _pad2(a, block_m, block_k)
+    bp = _pad2(b, block_k, block_n)
+    Mp, Np = ap.shape[0], bp.shape[1]
+    total = tile_count(Mp, Np, block_m, block_n)
+    ranges = atom_ranges(total, n_atoms)
+    if order:
+        assert sorted(order) == list(range(len(ranges))), order
+        ranges = [ranges[i] for i in order]
+    c = jnp.zeros((Mp, Np), a.dtype)
+    for start, ln in ranges:
+        c = matmul_atom(ap, bp, c, start=start, num_tiles=ln,
+                        block_m=block_m, block_n=block_n, block_k=block_k,
+                        interpret=interpret)
+    return c[:M, :N]

@@ -1,0 +1,44 @@
+"""jit'd wrapper: model-layout decode attention as a schedule of atoms.
+
+Model layout q [B,Hq,D], caches [B,S,Hk,D], lens [B] -> [B,Hq,D].
+Rows (B*Hk) are the schedulable units; ``n_atoms`` splits them into
+contiguous ranges executed as independent pallas_calls (the LithOS
+dispatcher's schedule)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.atom_matmul.ops import atom_ranges
+from repro.kernels.decode_attention.kernel import decode_attention_atom
+
+
+@functools.partial(jax.jit, static_argnames=("n_atoms", "block_k",
+                                             "interpret"))
+def decode_attention(q, k_cache, v_cache, lens, *, n_atoms: int = 1,
+                     block_k: int = 512, interpret: bool = False):
+    B, Hq, D = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hk
+    block_k = min(block_k, max(S, 16))
+    pad = (-S) % block_k
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = k_cache.shape[1]
+
+    # [B,Hq,D] -> [B,Hk,G,D] -> [R,G,D];  [B,S,Hk,D] -> [R,S,D]
+    qf = q.reshape(B, Hk, G, D).reshape(B * Hk, G, D)
+    kf = k_cache.transpose(0, 2, 1, 3).reshape(B * Hk, Sp, D)
+    vf = v_cache.transpose(0, 2, 1, 3).reshape(B * Hk, Sp, D)
+    lf = jnp.repeat(lens.astype(jnp.int32), Hk)
+
+    R = B * Hk
+    o = jnp.zeros_like(qf)
+    for start, ln in atom_ranges(R, n_atoms):
+        o = decode_attention_atom(qf, kf, vf, lf, o, start=start,
+                                  num_rows=ln, block_k=block_k,
+                                  interpret=interpret)
+    return o.reshape(B, Hk, G, D).reshape(B, Hq, D)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for decode attention (GQA, per-row valid lengths)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens):
+    """q: [B,Hq,D]; caches: [B,S,Hk,D]; lens: [B] int32 -> [B,Hq,D]."""
+    B, Hq, D = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hk
+    qg = q.reshape(B, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache.astype(jnp.float32))
+    s = s / jnp.sqrt(D).astype(jnp.float32)
+    valid = jnp.arange(S)[None, :] < lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,61 @@
+"""jit'd wrapper: full GQA flash attention as a schedule of atoms.
+
+Public layout matches the model stack: q [B,S,Hq,D], k/v [B,S,Hk,D].
+Sequence lengths are padded to block multiples (padded KV is masked by the
+causal test for pad-at-end; for non-causal, padded keys are suppressed by a
+-inf additive trick on the padded rows being zero — we instead require exact
+multiples and pad q only, masking output rows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.atom_matmul.ops import atom_ranges
+from repro.kernels.flash_attention.kernel import flash_attention_atom
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "n_atoms", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, n_atoms: int = 1,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False):
+    """[B,Sq,Hq,D] x [B,Sk,Hk,D] -> [B,Sq,Hq,D] via atomized Pallas flash."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    block_q = min(block_q, max(Sq, 16))
+    block_k = min(block_k, max(Sk, 16))
+    sm_scale = 1.0 / (D ** 0.5)
+
+    pad_q = (-Sq) % block_q
+    pad_k = (-Sk) % block_k
+    # pad queries at the FRONT (so causal alignment to the end of K holds)
+    # and keys at the END (masked out by the causal test for the real rows;
+    # padded q rows are discarded).
+    qp = jnp.pad(q, ((0, 0), (pad_q, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    if pad_k and not causal:
+        raise NotImplementedError("non-causal requires Sk % block_k == 0")
+
+    Sqp, Skp = qp.shape[1], kp.shape[1]
+    # kernel-internal layout [B*H, S, D]
+    qf = qp.transpose(0, 2, 1, 3).reshape(B * Hq, Sqp, D)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * Hk, Skp, D)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * Hk, Skp, D)
+
+    total = (B * Hq) * (Sqp // block_q)
+    o = jnp.zeros_like(qf)
+    # Padded keys sit at the end: shifting all q positions by -pad_k makes
+    # real query j (padded row pad_q + j) see exactly keys <= Sk - Sq + j and
+    # never a padded key; padded q rows are fully masked and discarded.
+    q_pos_offset = -pad_k
+    for start, ln in atom_ranges(total, n_atoms):
+        o = flash_attention_atom(
+            qf, kf, vf, o, start=start, num_tiles=ln, sm_scale=sm_scale,
+            causal=causal, block_q=block_q, block_k=block_k,
+            q_pos_offset=q_pos_offset, interpret=interpret)
+    o = o.reshape(B, Hq, Sqp, D).transpose(0, 2, 1, 3)
+    return o[:, pad_q:]

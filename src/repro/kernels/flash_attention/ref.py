@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, f32 math)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, sm_scale=None):
+    """q: [B,Sq,Hq,D]; k/v: [B,Sk,Hk,D] -> [B,Sq,Hq,D]."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    G = Hq // Hk
+    scale = sm_scale if sm_scale is not None else 1.0 / jnp.sqrt(D)
+    qg = q.reshape(B, Sq, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = (Sk - Sq) + jnp.arange(Sq)[:, None]
+        mask = jnp.arange(Sk)[None, :] <= qpos
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

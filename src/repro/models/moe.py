@@ -1,0 +1,140 @@
+"""Mixture-of-Experts layer with sort-based capacity dispatch.
+
+Dispatch is scatter/sort based (NOT the GShard one-hot einsum): the one-hot
+dispatch einsum costs T*E*C*D fake FLOPs and is infeasible at 1M-token
+prefill.  Here:
+
+  1. top-k routing -> (token, expert, gate) triples, T*k of them
+  2. stable-sort triples by expert id
+  3. position-in-expert via exclusive-cumsum of expert counts
+  4. scatter token activations into an [E, C, D] buffer (overflow dropped)
+  5. grouped matmul  [E,C,D] x [E,D,F]  — real FLOPs = cf * T * k * D * F
+  6. gather back + gate-weighted combine
+
+Expert parallelism: shard the leading E dim of the buffers/weights over the
+``model`` axis (``moe.parallelism == "ep"``); XLA inserts the all-to-alls at
+the scatter/gather boundaries.  TP-in-expert (``"tp"``) shards F instead.
+Load-balance + router-z auxiliary losses follow Switch/ST-MoE.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, einsum, fan_in_init, normal_init
+from repro.models.layers import apply_mlp, init_mlp
+from repro.configs.base import MoEConfig
+
+
+def init_moe(keys: KeyGen, d: int, cfg: MoEConfig, dtype):
+    p = {
+        "router": normal_init(keys(), (d, cfg.n_experts), dtype, scale=0.02),
+        "wi": normal_init(keys(), (cfg.n_experts, d, cfg.expert_d_ff), dtype),
+        "wg": normal_init(keys(), (cfg.n_experts, d, cfg.expert_d_ff), dtype),
+        "wo": fan_in_init(keys(), (cfg.n_experts, cfg.expert_d_ff, d), dtype, fan_axis=1),
+    }
+    if cfg.n_shared_experts:
+        f_shared = cfg.shared_d_ff * cfg.n_shared_experts
+        p["shared_wi"] = normal_init(keys(), (d, f_shared), dtype)
+        p["shared_wg"] = normal_init(keys(), (d, f_shared), dtype)
+        p["shared_wo"] = fan_in_init(keys(), (f_shared, d), dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _moe_grouped(params, xg, cfg: MoEConfig, C: int):
+    """Grouped dispatch + expert MLP.  xg: [G, T, D] with G = batch rows.
+
+    Groups keep every sort/scatter local to a data shard under GSPMD —
+    global (flat-token) dispatch contracts over the data-sharded token dim
+    and all-reduces an [E, C, ff]-sized buffer per layer per microbatch
+    (the dominant collective in the MoE train dry-runs before grouping —
+    EXPERIMENTS.md §Perf).  Explicit shard_dims constraints pin the G dim
+    to the data axes; scatters/gathers batch over it."""
+    from repro.models.sharding import shard_dims
+    G, T, D = xg.shape
+    E, K = cfg.n_experts, cfg.top_k
+
+    logits = einsum("gtd,de->gte", xg, params["router"],
+                    out_dtype=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # [G,T,E]
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)               # [G,T,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (Switch LB + router z), averaged over groups
+    me = probs.mean(axis=1)                                       # [G,E]
+    one_hot = jax.nn.one_hot(expert_ids, E, dtype=jnp.float32)    # [G,T,K,E]
+    ce = one_hot.sum(axis=(1, 2)) / (T * K)                       # [G,E]
+    lb_loss = (E * (me * ce).sum(-1)).mean()
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # sort-based dispatch within each group (all ops batched over G)
+    flat_eid = expert_ids.reshape(G, T * K)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(T), K)[None], (G, T * K))
+    flat_gate = gate_vals.reshape(G, T * K)
+    order = jnp.argsort(flat_eid, axis=1, stable=True)
+    s_eid = jnp.take_along_axis(flat_eid, order, axis=1)
+    s_tok = jnp.take_along_axis(flat_tok, order, axis=1)
+    s_gate = jnp.take_along_axis(flat_gate, order, axis=1)
+
+    counts = one_hot.sum(axis=(1, 2)).astype(jnp.int32)           # [G,E]
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.int32), jnp.cumsum(counts, axis=1)[:, :-1]],
+        axis=1)                                                   # [G,E]
+    pos_in_e = (jnp.arange(T * K, dtype=jnp.int32)[None]
+                - jnp.take_along_axis(starts, s_eid, axis=1))
+    keep = pos_in_e < C
+    slot = jnp.where(keep, s_eid * C + pos_in_e, E * C)           # drop slot
+
+    gathered = jnp.take_along_axis(xg, s_tok[..., None], axis=1)  # [G,TK,D]
+    buf = jnp.zeros((G, E * C + 1, D), xg.dtype)
+    buf = buf.at[jnp.arange(G)[:, None], slot].set(gathered)
+    expert_in = buf[:, :-1].reshape(G, E, C, D)
+    expert_in = shard_dims(expert_in, ("dp", None, None, None))
+
+    h = einsum("gecd,edf->gecf", expert_in, params["wi"])
+    g = einsum("gecd,edf->gecf", expert_in, params["wg"])
+    h = shard_dims(jax.nn.silu(g) * h, ("dp", None, None, "tp"))
+    expert_out = einsum("gecf,efd->gecd", h, params["wo"])
+    expert_out = shard_dims(expert_out, ("dp", None, None, None))
+
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(G, E * C, D),
+         jnp.zeros((G, 1, D), expert_out.dtype)], axis=1)
+    picked = jnp.take_along_axis(flat_out, slot[..., None], axis=1)
+    contrib = picked.astype(jnp.float32) * s_gate[..., None]
+    out = jnp.zeros((G, T, D), jnp.float32)
+    out = out.at[jnp.arange(G)[:, None], s_tok].add(contrib)
+    return out, lb_loss, z_loss
+
+
+def apply_moe(params, x, cfg: MoEConfig, *, rng: Optional[jax.Array] = None):
+    """x: [B,S,D] (or [T,D]).  Returns (out, aux) with aux = (lb, z).
+
+    GShard-style grouped dispatch: each batch row is a group — [G, E, C, *]
+    tensors shard over the data axis with zero cross-shard dispatch."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    if x.ndim == 3:
+        B, S = x.shape[0], x.shape[1]
+        xg = x
+        C = _capacity(S, cfg)
+    else:
+        xg = x.reshape(1, -1, D)
+        C = _capacity(xg.shape[1], cfg)
+    out, lb_loss, z_loss = _moe_grouped(params, xg, cfg, C)
+    out = out.reshape(orig_shape)
+
+    if cfg.n_shared_experts:
+        sh = {"wi": params["shared_wi"], "wg": params["shared_wg"],
+              "wo": params["shared_wo"]}
+        out = (out.astype(jnp.float32)
+               + apply_mlp(sh, x, "swiglu").astype(jnp.float32))
+    return out.astype(x.dtype), (lb_loss, z_loss)

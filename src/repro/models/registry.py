@@ -1,0 +1,85 @@
+"""Uniform model API over all assigned architecture families.
+
+Every architecture (decoder-only dense/MoE/SSM/hybrid/VLM and enc-dec audio)
+is driven through four entry points so the training loop, serving engine,
+dry-run, and workload compiler never branch on family:
+
+    init_model(cfg, key)                          -> params
+    train_loss(params, cfg, batch, **opts)        -> (loss, aux)
+    serve_prefill(params, cfg, batch, max_len)    -> (logits, caches)
+    serve_decode(params, cfg, token, pos, caches) -> (logits, caches)
+
+``batch`` contents by frontend (see ``configs.base.ArchConfig.frontend``):
+    none        {"tokens": [B,S] i32, "labels": [B,S] i32}
+    patch_stub  {"input_embeds": [B,S,D], "labels": [B,S] i32}   (VLM)
+    frame_stub  {"frames": [B,Ssrc,D], "tokens": [B,St] i32,
+                 "labels": [B,St] i32}                            (audio)
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+PyTree = Any
+
+AUX_LOSS_WEIGHTS = {"lb": 0.01, "z": 1e-3}   # Switch-style MoE aux weights
+
+
+def init_model(cfg: ArchConfig, key) -> PyTree:
+    if cfg.is_encoder_decoder:
+        return encdec.init_encdec(cfg, key)
+    return transformer.init_lm(cfg, key)
+
+
+def train_loss(params, cfg: ArchConfig, batch, *, remat: str = "none",
+               loss_chunk: int = 512, attn_block: int = 512):
+    """Mean next-token CE (+ weighted MoE aux losses).  Returns (loss, metrics)."""
+    if cfg.is_encoder_decoder:
+        h, (lb, zl) = encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+        # enc-dec loss projects through the tied embedding.
+        ce = _encdec_loss(params, cfg, h, batch["labels"], chunk=loss_chunk)
+    else:
+        h, (lb, zl) = transformer.forward(
+            params, cfg, batch.get("tokens"),
+            input_embeds=batch.get("input_embeds"), remat=remat,
+            attn_block=attn_block)
+        ce = transformer.lm_loss(params, cfg, h, batch["labels"], chunk=loss_chunk)
+    loss = ce + AUX_LOSS_WEIGHTS["lb"] * lb + AUX_LOSS_WEIGHTS["z"] * zl
+    return loss, {"ce": ce, "lb_loss": lb, "z_loss": zl}
+
+
+def _encdec_loss(params, cfg, h, labels, chunk: int = 512):
+    logits = encdec.lm_logits(params, cfg, h)          # [B,S,V] f32 (whisper V small)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.clip(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def serve_prefill(params, cfg: ArchConfig, batch, *, max_len: int,
+                  attn_block: int = 512):
+    if cfg.is_encoder_decoder:
+        enc_out = encdec.encode(params, cfg, batch["frames"])
+        B = batch["frames"].shape[0]
+        caches = encdec.init_dec_caches(params, cfg, enc_out, B, max_len)
+        tok0 = batch["tokens"][:, 0] if "tokens" in batch else jnp.zeros((B,), jnp.int32)
+        return encdec.decode_step(params, cfg, tok0, jnp.int32(0), caches)
+    return transformer.prefill(
+        params, cfg, batch.get("tokens"), input_embeds=batch.get("input_embeds"),
+        max_len=max_len, attn_block=attn_block)
+
+
+def serve_decode(params, cfg: ArchConfig, token, pos_scalar, caches):
+    if cfg.is_encoder_decoder:
+        return encdec.decode_step(params, cfg, token, pos_scalar, caches)
+    return transformer.decode_step(params, cfg, token, pos_scalar, caches)
+
+
+def param_logical_axes(params: PyTree) -> PyTree:
+    from repro.models.common import logical_axes
+    return logical_axes(params)

@@ -1,0 +1,94 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Structure per recurrent block:
+    x -> w_in -> u -----conv1d(w=4, causal)----> RG-LRU ---⊙--- w_out -> out
+    x -> w_gate_in -> gelu gate -----------------------------^
+
+RG-LRU:  r_t = σ(u_t W_a),  i_t = σ(u_t W_i)
+         log a_t = -c * softplus(Λ) * r_t          (c = 8)
+         h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over time (O(log S) depth —
+this is what makes ``long_500k`` feasible); decode is a single recurrent step
+with O(1) state: (h, conv ring buffer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dot, fan_in_init, normal_init, zeros_init
+
+_C = 8.0
+
+
+def init_rglru_block(keys: KeyGen, d: int, width: int, conv_width: int, dtype):
+    return {
+        "w_in": normal_init(keys(), (d, width), dtype),
+        "w_gate_in": normal_init(keys(), (d, width), dtype),
+        "conv_w": normal_init(keys(), (conv_width, width), dtype, scale=0.1),
+        "conv_b": zeros_init(keys(), (width,), dtype),
+        "w_a": normal_init(keys(), (width, width), dtype, scale=0.02),
+        "w_i": normal_init(keys(), (width, width), dtype, scale=0.02),
+        "lam": normal_init(keys(), (width,), jnp.float32, scale=0.5),
+        "w_out": fan_in_init(keys(), (width, d), dtype),
+    }
+
+
+def _causal_conv(u, conv_w, conv_b):
+    """u: [B,S,W]; depthwise causal conv along S."""
+    cw = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1]] * conv_w[i] for i in range(cw))
+    return out + conv_b
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(dot(u, params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(dot(u, params["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b_scale = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, b_scale * i * u.astype(jnp.float32)
+
+
+def apply_rglru_block(params, x, *, h0=None, conv_state=None, return_state=False):
+    """x: [B,S,D] -> [B,S,D].  h0/conv_state: decode-style initial state."""
+    u = dot(x, params["w_in"])
+    gate = jax.nn.gelu(dot(x, params["w_gate_in"]))
+    if conv_state is not None:
+        cw = params["conv_w"].shape[0]
+        hist = jnp.concatenate([conv_state, u], axis=1)           # [B, cw-1+S, W]
+        uc = _causal_conv(hist, params["conv_w"], params["conv_b"])[:, cw - 1:]
+        new_conv_state = hist[:, -(cw - 1):]
+    else:
+        uc = _causal_conv(u, params["conv_w"], params["conv_b"])
+        new_conv_state = None
+
+    a, b = _gates(params, uc)
+    if h0 is not None:
+        # seed the scan with the carried state via a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+    aa, hh = jax.lax.associative_scan(
+        lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]), (a, b), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    h = hh.astype(x.dtype)
+    out = dot(gate * h, params["w_out"])
+    if return_state:
+        return out, (h[:, -1], new_conv_state)
+    return out
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int, dtype):
+    return (jnp.zeros((batch, width), dtype),
+            jnp.zeros((batch, conv_width - 1, width), dtype))
+
+
+def decode_rglru_block(params, x, state):
+    """x: [B,1,D]; state: (h [B,W], conv_state [B,cw-1,W]) -> (out [B,1,D], state)."""
+    h_prev, conv_state = state
+    out, (h, new_conv) = apply_rglru_block(
+        params, x, h0=h_prev, conv_state=conv_state, return_state=True)
+    return out, (h, new_conv)

@@ -1,0 +1,211 @@
+"""Logical-axis -> mesh-axis resolution and activation sharding helpers.
+
+Two built-in rule-sets:
+
+* ``tp_dp``   — tensor parallel over ``model``; params replicated over ``data``
+                (fine for <= ~10B configs).
+* ``fsdp_tp`` — additionally shards the layer-stacked dim / embed dims over
+                ``data`` (ZeRO-3 style); required for the 340B/314B configs.
+
+The ``pod`` axis (multi-pod mesh) joins ``data`` for batch / FSDP sharding.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# logical axis -> mesh axes, per rule-set.  Entries may be a tuple of mesh
+# axes (sharded over their product) or None (replicated).
+RULESETS: dict[str, dict[str, Any]] = {
+    "tp_dp": {
+        "vocab": "model",
+        "embed": None,
+        "embed2": None,
+        "ff": "model",
+        "expert_ff": None,
+        "experts": "model",
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head": None,
+        "layers": None,
+        "rnn": "model",
+        "rnn_heads": None,
+    },
+    "fsdp_tp": {
+        "vocab": "model",
+        "embed": "data",          # FSDP: shard the big embed dim over data
+        "embed2": None,
+        "ff": "model",
+        "expert_ff": "model",
+        "experts": None,          # overridden to "model" when moe.parallelism == "ep"
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head": None,
+        "layers": None,
+        "rnn": "model",
+        "rnn_heads": None,
+    },
+}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that make up the data-parallel dimension (pod folds in)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def resolve_rules(ruleset: str, mesh: Mesh, ep: bool = False) -> dict[str, Any]:
+    rules = dict(RULESETS[ruleset])
+    if ep:
+        rules["experts"] = "model"
+        rules["expert_ff"] = None
+    if ruleset == "fsdp_tp" and rules.get("embed") == "data":
+        rules["embed"] = data_axes(mesh) or None
+    return rules
+
+
+def spec_for_axes(axes: tuple, rules: dict[str, Any],
+                  shape: Optional[tuple] = None,
+                  mesh: Optional[Mesh] = None) -> P:
+    """Resolve logical axes to a PartitionSpec.  When ``shape`` and ``mesh``
+    are given, mesh axes that do not divide the dimension are dropped
+    (e.g. 8 GQA kv heads on a 16-way model axis replicate — the standard
+    KV-replication fallback)."""
+    parts = []
+    used: set[str] = set()
+    for i, ax in enumerate(axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        ms = tuple(a for a in ((m,) if isinstance(m, str) else tuple(m))
+                   if a not in used)
+        if shape is not None and mesh is not None and i < len(shape):
+            keep, prod = [], 1
+            for a in ms:
+                size = mesh.shape[a]
+                if shape[i] % (prod * size) == 0:
+                    keep.append(a)
+                    prod *= size
+            ms = tuple(keep)
+        used.update(ms)
+        if not ms:
+            parts.append(None)
+        else:
+            parts.append(ms if len(ms) != 1 else ms[0])
+    return P(*parts)
+
+
+def param_shardings(param_axes: PyTree, mesh: Mesh, ruleset: str = "tp_dp",
+                    ep: bool = False, shapes: Optional[PyTree] = None
+                    ) -> PyTree:
+    rules = resolve_rules(ruleset, mesh, ep=ep)
+    is_axes = lambda x: isinstance(x, tuple)
+    if shapes is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, spec_for_axes(axes, rules)),
+            param_axes, is_leaf=is_axes)
+    ax_leaves, treedef = jax.tree_util.tree_flatten(param_axes,
+                                                    is_leaf=is_axes)
+    shp_leaves = jax.tree_util.tree_flatten(shapes)[0]
+    out = [NamedSharding(mesh, spec_for_axes(a, rules, tuple(s.shape), mesh))
+           for a, s in zip(ax_leaves, shp_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints
+# ---------------------------------------------------------------------------
+
+_ACT_SPECS = {
+    # [batch, seq, embed]
+    "act_btd": lambda d: P(d, None, None),
+    # [batch, seq, heads, head_dim]
+    "act_bthd": lambda d: P(d, None, "model", None),
+    # [batch, heads, ...]   (decode: no seq dim)
+    "act_bhd": lambda d: P(d, "model", None),
+    # sequence-sharded long-context activations [batch, seq, embed]
+    "act_seq": lambda d: P(None, d, None),
+    # logits chunk [batch, chunk, vocab]
+    "act_btv": lambda d: P(d, None, "model"),
+}
+
+
+def shard_act(x, kind: str, mesh: Optional[Mesh] = None):
+    """Apply a named activation sharding constraint (no-op without a mesh).
+    Mesh axes that do not divide the corresponding dimension are dropped
+    (e.g. 40 attention heads on a 16-way model axis)."""
+    mesh = mesh if mesh is not None else _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    d = data_axes(mesh)
+    d = d if len(d) > 1 else (d[0] if d else None)
+    spec = _ACT_SPECS[kind](d)
+    parts = []
+    for i, p in enumerate(spec):
+        if p is None or i >= x.ndim:
+            parts.append(None)
+            continue
+        axes = (p,) if isinstance(p, str) else tuple(p)
+        keep, prod = [], 1
+        for a in axes:
+            if x.shape[i] % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        parts.append(None if not keep
+                     else (keep[0] if len(keep) == 1 else tuple(keep)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def shard_dims(x, dims: tuple, mesh: Optional[Mesh] = None):
+    """Generic per-dim constraint: 'dp' -> data axes, 'tp' -> model, None ->
+    replicated.  Non-divisible dims silently replicate."""
+    mesh = mesh if mesh is not None else _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    d = data_axes(mesh)
+    parts: list = []
+    for i, tag in enumerate(dims[:x.ndim]):
+        if tag == "dp":
+            axes = d
+        elif tag == "tp":
+            axes = ("model",)
+        else:
+            parts.append(None)
+            continue
+        keep, prod = [], 1
+        for a in axes:
+            if x.shape[i] % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        parts.append(None if not keep
+                     else (keep[0] if len(keep) == 1 else tuple(keep)))
+    parts += [None] * (x.ndim - len(parts))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+_MESH_STACK: list[Mesh] = []
+
+
+class use_mesh:
+    """Context manager installing a mesh for shard_act constraints."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _MESH_STACK.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _MESH_STACK.pop()
+        return False
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return _MESH_STACK[-1] if _MESH_STACK else None

@@ -1,0 +1,262 @@
+"""xLSTM blocks (arXiv:2405.04517): chunk-parallel mLSTM + sequential sLSTM.
+
+mLSTM (matrix memory, exponentially gated):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+computed here in the *stabilized chunkwise-parallel* form (log-space gate
+cumsums, per-row running max M_t, state carried as (Ĉ, n̂, m) with
+Ĉ = C e^{-m}).  Within-chunk work is attention-like (quadratic in the chunk),
+across chunks a lax.scan — this is what lets prefill_32k lower without a
+32k-step while loop.
+
+sLSTM (scalar memory, recurrent head-wise connections) is a true nonlinear
+recurrence and is executed as a per-timestep lax.scan (not parallelizable —
+inherent to the architecture; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import KeyGen, dot, einsum, fan_in_init, normal_init, zeros_init
+from repro.models.layers import apply_mlp, init_mlp
+
+MLSTM_EXPANSION = 2.0
+SLSTM_FF_EXPANSION = 8.0 / 3.0
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def init_mlstm_block(keys: KeyGen, d: int, n_heads: int, conv_width: int, dtype):
+    di = int(MLSTM_EXPANSION * d)
+    hd = di // n_heads
+    return {
+        "w_up": normal_init(keys(), (d, 2 * di), dtype),
+        "conv_w": normal_init(keys(), (conv_width, di), dtype, scale=0.1),
+        "w_q": normal_init(keys(), (di, n_heads, hd), dtype),
+        "w_k": normal_init(keys(), (di, n_heads, hd), dtype),
+        "w_v": normal_init(keys(), (di, n_heads, hd), dtype),
+        "w_ig": normal_init(keys(), (di, n_heads), dtype, scale=0.01),
+        "b_ig": zeros_init(keys(), (n_heads,), jnp.float32),
+        "w_fg": normal_init(keys(), (di, n_heads), dtype, scale=0.01),
+        "b_fg": 3.0 * jnp.ones((n_heads,), jnp.float32),
+        "w_down": fan_in_init(keys(), (di, d), dtype),
+    }
+
+
+class MLstmState(NamedTuple):
+    C: jax.Array      # [B,H,Dk,Dv]  scaled by e^{-m}
+    n: jax.Array      # [B,H,Dk]     scaled by e^{-m}
+    m: jax.Array      # [B,H]
+
+
+def init_mlstm_state(batch: int, n_heads: int, hd: int) -> MLstmState:
+    return MLstmState(
+        C=jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, n_heads, hd), jnp.float32),
+        m=jnp.full((batch, n_heads), NEG_INF, jnp.float32),
+    )
+
+
+def _mlstm_qkv_gates(params, x):
+    """x: [B,S,D] -> q,k,v [B,S,H,hd], i/f gate logits [B,S,H], o-gate input."""
+    u = dot(x, params["w_up"])
+    c_in, o_in = jnp.split(u, 2, axis=-1)
+    cw = params["conv_w"].shape[0]
+    pad = jnp.pad(c_in, ((0, 0), (cw - 1, 0), (0, 0)))
+    c_conv = sum(pad[:, i:i + x.shape[1]] * params["conv_w"][i] for i in range(cw))
+    c_conv = jax.nn.silu(c_conv)
+    q = einsum("btd,dhk->bthk", c_conv, params["w_q"])
+    k = einsum("btd,dhk->bthk", c_conv, params["w_k"]) / jnp.sqrt(q.shape[-1]).astype(x.dtype)
+    v = einsum("btd,dhk->bthk", c_in, params["w_v"])
+    ig = einsum("btd,dh->bth", c_in, params["w_ig"], out_dtype=jnp.float32) + params["b_ig"]
+    fg = einsum("btd,dh->bth", c_in, params["w_fg"], out_dtype=jnp.float32) + params["b_fg"]
+    return q, k, v, ig, fg, o_in
+
+
+def _mlstm_chunk(state: MLstmState, qkvif):
+    """Process one chunk of length L.  All in f32."""
+    q, k, v, ig, fg = qkvif                  # q/k/v: [B,L,H,hd]; ig/fg: [B,L,H]
+    B, L, H, hd = q.shape
+    q, k, v = (t.astype(jnp.float32).transpose(0, 2, 1, 3) for t in (q, k, v))
+    ig = ig.transpose(0, 2, 1)               # [B,H,L]
+    logf = jax.nn.log_sigmoid(fg).transpose(0, 2, 1)
+    b = jnp.cumsum(logf, axis=-1)            # [B,H,L]  cumulative log forget
+    b_total = b[..., -1]
+
+    # scores D[t,s] = b_t - b_s + ig_s   (s <= t)
+    Dm = b[..., :, None] - b[..., None, :] + ig[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    Dm = jnp.where(mask, Dm, NEG_INF)
+    m_intra = Dm.max(axis=-1)                              # [B,H,L]
+    m_inter = b + state.m[..., None]                       # C_0 contribution scale
+    M = jnp.maximum(m_intra, m_inter)                      # [B,H,L]
+    M = jnp.maximum(M, -NEG_INF * 0 - 50.0 + 0 * M)        # floor to avoid inf underflow
+    P = jnp.exp(Dm - M[..., None])                         # [B,H,L,L]
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k)           # k pre-scaled by 1/sqrt(hd)
+    W = P * scores
+    num_intra = jnp.einsum("bhts,bhsd->bhtd", W, v)
+    den_intra = jnp.einsum("bhts,bhsd->bht", W, k)
+
+    inter_scale = jnp.exp(b + state.m[..., None] - M)      # [B,H,L]
+    num_inter = jnp.einsum("bhtd,bhdk->bhtk", q, state.C) * inter_scale[..., None]
+    den_inter = jnp.einsum("bhtd,bhd->bht", q, state.n) * inter_scale
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-M))[..., None]
+
+    # ---- state update to end of chunk ----
+    decay = b_total[..., None] - b + ig                    # [B,H,L]
+    m_new = jnp.maximum(b_total + state.m, decay.max(axis=-1))
+    carry_scale = jnp.exp(b_total + state.m - m_new)
+    upd = jnp.exp(decay - m_new[..., None])                # [B,H,L]
+    C_new = state.C * carry_scale[..., None, None] + jnp.einsum(
+        "bhs,bhsd,bhse->bhde", upd, k, v)
+    n_new = state.n * carry_scale[..., None] + jnp.einsum("bhs,bhsd->bhd", upd, k)
+    return MLstmState(C_new, n_new, m_new), h.transpose(0, 2, 1, 3)   # [B,L,H,hd]
+
+
+def apply_mlstm_block(params, x, *, chunk: int = 256, state: MLstmState = None,
+                      return_state: bool = False):
+    """x: [B,S,D] -> [B,S,D] (chunkwise-parallel mLSTM).
+
+    With ``return_state`` returns (out, (MLstmState, conv_tail)) where
+    conv_tail is the last ``conv_width-1`` pre-conv activations (decode carry).
+    """
+    B, S, D = x.shape
+    q, k, v, ig, fg, o_in = _mlstm_qkv_gates(params, x)
+    H, hd = q.shape[2], q.shape[3]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, padw) for t in (q, k, v))
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)))
+    nC = q.shape[1] // chunk
+
+    def split(t):
+        return t.reshape(B, nC, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = tuple(split(t) for t in (q, k, v, ig, fg))
+    st0 = state if state is not None else init_mlstm_state(B, H, hd)
+    st, hs = jax.lax.scan(_mlstm_chunk, st0, xs)           # hs: [nC,B,chunk,H,hd]
+    h = hs.swapaxes(0, 1).reshape(B, nC * chunk, H * hd)[:, :S].astype(x.dtype)
+    out = dot(h * jax.nn.silu(o_in), params["w_down"])
+    if return_state:
+        cw = params["conv_w"].shape[0]
+        c_in = dot(x, params["w_up"])[..., : params["w_q"].shape[0]]
+        tail = jnp.pad(c_in, ((0, 0), (cw - 1, 0), (0, 0)))[:, -(cw - 1):]
+        return out, (st, tail)
+    return out
+
+
+def decode_mlstm_block(params, x, state: MLstmState, conv_state):
+    """Single-token recurrent step.  x: [B,1,D]."""
+    cw = params["conv_w"].shape[0]
+    u = dot(x, params["w_up"])
+    c_in, o_in = jnp.split(u, 2, axis=-1)
+    hist = jnp.concatenate([conv_state, c_in], axis=1)     # [B,cw,Di]
+    c_conv = jax.nn.silu(jnp.einsum("btd,td->bd", hist, params["conv_w"]))[:, None]
+    q = einsum("btd,dhk->bthk", c_conv, params["w_q"])[:, 0].astype(jnp.float32)
+    k = (einsum("btd,dhk->bthk", c_conv, params["w_k"])[:, 0] /
+         jnp.sqrt(q.shape[-1])).astype(jnp.float32)
+    v = einsum("btd,dhk->bthk", c_in, params["w_v"])[:, 0].astype(jnp.float32)
+    ig = (einsum("btd,dh->bth", c_in, params["w_ig"], out_dtype=jnp.float32)[:, 0]
+          + params["b_ig"])
+    fg = (einsum("btd,dh->bth", c_in, params["w_fg"], out_dtype=jnp.float32)[:, 0]
+          + params["b_fg"])
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state.m, ig)
+    f_s = jnp.exp(logf + state.m - m_new)
+    i_s = jnp.exp(ig - m_new)
+    C = state.C * f_s[..., None, None] + i_s[..., None, None] * k[..., :, None] * v[..., None, :]
+    n = state.n * f_s[..., None] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhdk->bhk", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    B = x.shape[0]
+    h = h.reshape(B, 1, -1).astype(x.dtype)
+    out = dot(h * jax.nn.silu(o_in), params["w_down"])
+    return out, MLstmState(C, n, m_new), hist[:, 1:]
+
+
+def init_mlstm_conv_state(batch: int, d: int, conv_width: int, dtype):
+    return jnp.zeros((batch, conv_width - 1, int(MLSTM_EXPANSION * d)), dtype)
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def init_slstm_block(keys: KeyGen, d: int, n_heads: int, dtype):
+    hd = d // n_heads
+    p = {}
+    for g in ("i", "f", "z", "o"):
+        p[f"w_{g}"] = normal_init(keys(), (d, n_heads, hd), dtype)
+        p[f"r_{g}"] = normal_init(keys(), (n_heads, hd, hd), dtype, scale=0.02)
+        p[f"b_{g}"] = (2.0 if g == "f" else 0.0) * jnp.ones((n_heads, hd), jnp.float32)
+    f = int(SLSTM_FF_EXPANSION * d) // 64 * 64 or 64
+    p["ffn_wi"] = normal_init(keys(), (d, f), dtype)
+    p["ffn_wg"] = normal_init(keys(), (d, f), dtype)
+    p["ffn_wo"] = fan_in_init(keys(), (f, d), dtype)
+    return p
+
+
+class SLstmState(NamedTuple):
+    c: jax.Array    # [B,H,hd]
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def init_slstm_state(batch: int, n_heads: int, hd: int) -> SLstmState:
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return SLstmState(z, z, z, z + NEG_INF)
+
+
+def _slstm_step(params, state: SLstmState, wx):
+    """wx: dict of pre-computed input contributions [B,H,hd] per gate."""
+    rec = {g: jnp.einsum("bhd,hdk->bhk", state.h, params[f"r_{g}"].astype(jnp.float32))
+           for g in ("i", "f", "z", "o")}
+    il = wx["i"] + rec["i"] + params["b_i"]
+    fl = wx["f"] + rec["f"] + params["b_f"]
+    zl = jnp.tanh(wx["z"] + rec["z"] + params["b_z"])
+    ol = jax.nn.sigmoid(wx["o"] + rec["o"] + params["b_o"])
+    logf = jax.nn.log_sigmoid(fl)
+    m_new = jnp.maximum(logf + state.m, il)
+    i_s = jnp.exp(il - m_new)
+    f_s = jnp.exp(logf + state.m - m_new)
+    c = f_s * state.c + i_s * zl
+    n = jnp.maximum(f_s * state.n + i_s, 1e-6)
+    h = ol * c / n
+    return SLstmState(c, n, h, m_new), h
+
+
+def apply_slstm_block(params, x, *, state: SLstmState = None, return_state: bool = False):
+    """x: [B,S,D] -> [B,S,D] (sequential scan; inherent to sLSTM)."""
+    B, S, D = x.shape
+    H, hd = params["w_i"].shape[1], params["w_i"].shape[2]
+    wx = {g: einsum("btd,dhk->bthk", x, params[f"w_{g}"], out_dtype=jnp.float32)
+          for g in ("i", "f", "z", "o")}
+    xs = jax.tree.map(lambda t: t.swapaxes(0, 1), wx)       # [S,B,H,hd]
+    st0 = state if state is not None else init_slstm_state(B, H, hd)
+    st, hs = jax.lax.scan(lambda s, w: _slstm_step(params, s, w), st0, xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, D).astype(x.dtype)
+    out = h + apply_mlp({"wi": params["ffn_wi"], "wg": params["ffn_wg"],
+                         "wo": params["ffn_wo"]}, h, "swiglu")
+    if return_state:
+        return out, st
+    return out
+
+
+def decode_slstm_block(params, x, state: SLstmState):
+    out, st = apply_slstm_block(params, x, state=state, return_state=True)
+    return out, st

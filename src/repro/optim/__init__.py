@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (OptState, adamw_init, adamw_update,
+                                    make_optimizer)
+from repro.optim.schedules import cosine_schedule, linear_warmup

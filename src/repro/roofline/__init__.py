@@ -1,0 +1,2 @@
+from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.analysis import RooflineTerms, derive_terms, V5E

@@ -1,0 +1,111 @@
+"""HLO collective parser: per-device communication bytes from compiled HLO.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+post-optimization HLO text and sum the bytes each collective moves over the
+interconnect, per device, using standard ring-algorithm accounting:
+
+    all-gather        result_bytes * (g-1)/g      (receives g-1 shards)
+    reduce-scatter    operand_bytes * (g-1)/g
+    all-reduce        2 * bytes * (g-1)/g         (RS + AG)
+    all-to-all        bytes * (g-1)/g
+    collective-permute  bytes                      (one hop send)
+
+where g is the replica-group size parsed from ``replica_groups``.  Shapes in
+post-SPMD HLO are already per-device, so results are per-device bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Sum bytes over a (possibly tuple) HLO type string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))        # [n_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, len([x for x in first.split(",") if x.strip() != ""]))
+    return 2
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes_moved: float                 # per device, over the interconnect
+    result_bytes: float
+    group_size: int
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        rb = _shape_bytes(type_str)
+        g = _group_size(line)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            moved = rb * frac
+        elif kind == "reduce-scatter":
+            moved = rb * (g - 1)        # operand = result * g
+        elif kind == "all-reduce":
+            moved = 2 * rb * frac
+        elif kind == "all-to-all":
+            moved = rb * frac
+        else:                           # collective-permute
+            moved = rb
+        ops.append(CollectiveOp(kind, moved, rb, g))
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-device interconnect bytes by collective kind (+ 'total')."""
+    out: dict[str, float] = defaultdict(float)
+    for op in parse_collectives(hlo_text):
+        out[op.kind] += op.bytes_moved
+        out["total"] += op.bytes_moved
+    return dict(out)
+
+
+def count_ops(hlo_text: str, names=("fusion", "all-reduce", "all-gather",
+                                    "reduce-scatter", "all-to-all",
+                                    "collective-permute", "dot",
+                                    "convolution", "custom-call")) -> dict:
+    counts = {}
+    for n in names:
+        counts[n] = len(re.findall(rf"\s{re.escape(n)}(?:-start)?\(", hlo_text))
+    return counts

@@ -1,0 +1,128 @@
+"""train_step factory: remat, microbatch accumulation, optional int8
+gradient compression with error feedback, sharding-aware.
+
+``make_train_step(cfg, ...)`` returns ``(init_state, train_step)`` where
+``train_step(state, batch) -> (state, metrics)`` is pure and pjit-able.
+Microbatching scans over ``n_micro`` slices of the global batch,
+accumulating grads in fp32 (HLO stays O(1) in n_micro).  Gradient
+compression quantizes the accumulated grads to int8 blocks before the
+(conceptual) data-axis reduction and keeps the quantization error as
+feedback added to the next step — halving data-parallel collective bytes
+at equal asymptotic convergence (error feedback is unbiased in the limit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import init_model, train_loss
+from repro.optim.optimizers import (AdamWConfig, OptState, adamw_init,
+                                    adamw_update, dequantize, quantize)
+from repro.optim.schedules import cosine_schedule
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    remat: str = "none"              # none | dots | full
+    n_micro: int = 1
+    loss_chunk: int = 512
+    attn_block: int = 512
+    grad_compress: bool = False      # int8 + error feedback
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: str = "float32"
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: OptState
+    err_fb: Optional[PyTree]         # error-feedback residual (compression)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """[B, ...] -> [n, B//n, ...] for scanning."""
+    def f(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+    return {k: f(v) for k, v in batch.items()}
+
+
+def _compress_grads(grads: PyTree, err: PyTree) -> tuple[PyTree, PyTree]:
+    """int8 block quantization with error feedback.  Returns (decoded
+    grads as would arrive post-all-reduce, new residual)."""
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q = quantize(g32)
+        dec = dequantize(q)
+        return dec, g32 - dec
+    out = jax.tree.map(leaf, grads, err)
+    dec = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)
+    return dec, new_err
+
+
+def make_train_step(cfg: ArchConfig, tc: TrainConfig = TrainConfig()):
+    opt_cfg = AdamWConfig(lr=tc.lr, weight_decay=tc.weight_decay,
+                          grad_clip=tc.grad_clip,
+                          moment_dtype=tc.moment_dtype)
+
+    def init_state(key) -> TrainState:
+        params = init_model(cfg, key)
+        opt = adamw_init(params, opt_cfg)
+        err = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+               if tc.grad_compress else None)
+        return TrainState(params, opt, err)
+
+    def loss_fn(params, micro):
+        loss, metrics = train_loss(params, cfg, micro, remat=tc.remat,
+                                   loss_chunk=tc.loss_chunk,
+                                   attn_block=tc.attn_block)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        params = state.params
+        if tc.n_micro > 1:
+            micro = _split_micro(batch, tc.n_micro)
+
+            def body(acc, mb):
+                (loss, metrics), g = grad_fn(params, mb)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 acc[0], g)
+                return (g, acc[1] + loss), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / tc.n_micro, gsum)
+            loss = lsum / tc.n_micro
+            metrics = {"ce": loss}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        err_fb = state.err_fb
+        if tc.grad_compress:
+            grads, err_fb = _compress_grads(grads, err_fb)
+
+        lr = cosine_schedule(state.opt.step, tc.lr, tc.total_steps,
+                             tc.warmup_steps)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state.opt, opt_cfg, lr)
+        out = {"loss": loss, "lr": lr, **metrics, **opt_metrics}
+        return TrainState(new_params, new_opt, err_fb), out
+
+    return init_state, train_step

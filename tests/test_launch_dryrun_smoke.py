@@ -1,0 +1,68 @@
+"""Dry-run smoke: one small cell lowered+compiled in a subprocess (the
+device-count flag must not leak into this test process), plus mesh/
+sharding unit checks that run in-process on 1 device."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.models.common import logical_axes
+from repro.models.sharding import spec_for_axes, resolve_rules
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_one_cell(tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "olmo-1b",
+         "--shape", "train_4k", "--force"],
+        capture_output=True, text=True, env=env, timeout=560)
+    assert "-> ok" in out.stdout, out.stdout + out.stderr
+    path = os.path.join(SRC, "..", "reports", "dryrun", "pod16x16",
+                        "olmo-1b__train_4k.json")
+    cell = json.load(open(path))
+    assert cell["status"] == "ok"
+    assert cell["chips"] == 256
+    assert cell["cost"]["flops_per_device"] > 0
+    assert cell["roofline"]["useful_ratio"] > 0.5
+
+
+def test_this_process_sees_one_device():
+    assert len(jax.devices()) == 1     # the dry-run flag must not leak
+
+
+def test_spec_divisibility_dropping():
+    import numpy as np
+    mesh = Mesh(np.array(jax.devices() * 1).reshape(1, 1), ("data", "model"))
+    rules = resolve_rules("tp_dp", mesh)
+    # kv_heads smaller than the axis: with a shape that does not divide,
+    # the axis is dropped
+    spec = spec_for_axes(("embed", "kv_heads", "head"), rules,
+                         shape=(64, 8, 16), mesh=mesh)
+    assert spec == P(None, "model", None) or spec == P(None, None, None)
+
+
+def test_logical_axes_cover_all_params():
+    """Every parameter leaf of every arch resolves to a logical-axes tuple
+    of matching rank (None-padding means replicated, fine — but rank
+    mismatches would silently mis-shard)."""
+    from repro.models.registry import init_model
+    for arch in ("llama3-8b", "qwen2-moe-a2.7b", "recurrentgemma-9b",
+                 "whisper-small", "xlstm-1.3b"):
+        cfg = get_config(arch).reduced()
+        shapes = jax.eval_shape(lambda k: init_model(cfg, k),
+                                jax.random.PRNGKey(0))
+        axes = logical_axes(shapes)
+        for (pa, ax), (ps, leaf) in zip(
+                jax.tree_util.tree_flatten_with_path(
+                    axes, is_leaf=lambda x: isinstance(x, tuple))[0],
+                jax.tree_util.tree_flatten_with_path(shapes)[0]):
+            assert len(ax) == leaf.ndim, (arch, pa, ax, leaf.shape)

@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step and a prefill+decode round-trip on CPU; asserts output shapes
+and finiteness.  The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ALL_SHAPES, ARCH_IDS, get_config
+from repro.models.registry import (init_model, serve_decode, serve_prefill,
+                                   train_loss)
+
+
+def _batch(cfg, B=2, S=24):
+    batch = {}
+    if cfg.frontend == "none":
+        batch["tokens"] = jnp.ones((B, S), jnp.int32)
+    elif cfg.frontend == "patch_stub":
+        batch["input_embeds"] = jnp.zeros((B, S, cfg.d_model), jnp.bfloat16)
+    elif cfg.frontend == "frame_stub":
+        batch["frames"] = jnp.zeros((B, 32, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = jnp.ones((B, S), jnp.int32)
+    batch["labels"] = jnp.ones((B, S), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    loss, metrics = train_loss(params, cfg, _batch(cfg))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_serve_roundtrip(arch):
+    cfg = get_config(arch).reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 12
+    batch = _batch(cfg, B, S)
+    batch.pop("labels")
+    logits, caches = serve_prefill(params, cfg, batch, max_len=32)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), arch
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, caches = serve_decode(params, cfg, tok, jnp.int32(S), caches)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_config(arch):
+    """The full config matches the assignment table exactly."""
+    cfg = get_config(arch)
+    table = {
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "nemotron-4-340b": (96, 18432, 96, 8, 73728, 256000),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "llava-next-34b": (60, 7168, 56, 8, 20480, 64000),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    }
+    L, d, h, kv, ff, v = table[arch]
+    assert cfg.n_layers == L and cfg.d_model == d
+    assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff and cfg.vocab_size == v
+
+
+def test_moe_configs():
+    q = get_config("qwen2-moe-a2.7b")
+    assert q.moe.n_experts == 60 and q.moe.top_k == 4
+    assert q.moe.n_shared_experts == 4
+    g = get_config("grok-1-314b")
+    assert g.moe.n_experts == 8 and g.moe.top_k == 2
+
+
+def test_shape_applicability_covers_40_cells():
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for s in ALL_SHAPES:
+            rows.append((arch, s.name, *cfg.shape_applicable(s)))
+    assert len(rows) == 40
+    skips = [r for r in rows if not r[2]]
+    # long_500k runs only for the sub-quadratic archs
+    runs_500k = [r[0] for r in rows if r[1] == "long_500k" and r[2]]
+    assert sorted(runs_500k) == ["recurrentgemma-9b", "xlstm-1.3b"]
+    # whisper skips the >448-token serving shapes
+    whisper_skips = [r[1] for r in skips if r[0] == "whisper-small"]
+    assert set(whisper_skips) == {"prefill_32k", "decode_32k", "long_500k"}
+
+
+def test_param_counts_sane():
+    approx = {"llama3-8b": 8.0e9, "nemotron-4-340b": 341e9,
+              "qwen1.5-32b": 32.5e9, "olmo-1b": 1.3e9,
+              "grok-1-314b": 314e9}
+    for arch, expect in approx.items():
+        n = get_config(arch).param_count()
+        assert 0.75 * expect < n < 1.30 * expect, (arch, n, expect)

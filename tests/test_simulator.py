@@ -1,0 +1,141 @@
+"""Simulator + policy invariants: capacity, quota isolation, gating
+semantics, work conservation, and qualitative orderings from the paper."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.core.lithos import evaluate, quotas_from_apps, run_alone
+from repro.core.scheduler import LithOSConfig, LithOSScheduler
+from repro.core.simulator import Simulator
+from repro.core.types import DeviceSpec, Priority, Quota
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+
+
+def hp_app(rps=20.0, name="hp"):
+    return AppSpec(name, OLMO, "fwd_infer", priority=Priority.HIGH,
+                   rps=rps, prompt_mix=((128, 1.0),), batch=4, fusion=8)
+
+
+def be_train(name="be"):
+    return AppSpec(name, LLAMA, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8)
+
+
+class CapacityChecker:
+    """Wraps a policy to assert slice capacity at every event."""
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+
+    def check(self):
+        held = sum(ek.slices for ek in self.sim.in_flight.values())
+        assert held <= self.sim.device.n_slices, held
+
+
+@pytest.mark.parametrize("system", ["lithos", "mps", "mig", "timeslice",
+                                    "priority", "reef", "tgs", "orion"])
+def test_capacity_never_exceeded(system):
+    apps = [hp_app(), be_train()]
+    from repro.core.lithos import make_policy
+    policy = make_policy(system, DEV, apps)
+    sim = Simulator(DEV, apps, policy, horizon=2.0, seed=0)
+    orig = sim._apply_allocations
+
+    def checked():
+        out = orig()
+        held = sum(ek.slices for ek in sim.in_flight.values())
+        assert held <= DEV.n_slices, (system, held)
+        return out
+
+    sim._apply_allocations = checked
+    res = sim.run()
+    assert res.client("hp").n_completed > 0
+
+
+def test_closed_system_conserves_jobs():
+    """Every arrived HP job completes by end of a long-enough horizon."""
+    apps = [hp_app(rps=5.0)]
+    res = evaluate("lithos", DEV, apps, horizon=10.0, seed=1)
+    hp = res.client("hp")
+    assert hp.n_completed > 0
+    assert all(l > 0 for l in hp.latencies)
+
+
+def test_lithos_quota_isolation_two_hp():
+    """With per-client quotas, a bursty HP A is isolated from HP B's long
+    kernels — unlike priority scheduling where they collide (Fig 13)."""
+    hpa = AppSpec("hpA", OLMO, "fwd_infer", priority=Priority.HIGH,
+                  quota_slices=27, rps=30.0, prompt_mix=((128, 1.0),),
+                  batch=4, fusion=8)
+    hpb = AppSpec("hpB", LLAMA, "llm_infer", priority=Priority.HIGH,
+                  quota_slices=27, rps=0.0, prompt_mix=((4096, 1.0),),
+                  decode_tokens=16, fusion=4)
+    ideal = run_alone(DEV, hpa, horizon=6.0, seed=2).client("hpA").p99
+    lith = evaluate("lithos", DEV, [hpa, hpb], horizon=6.0, seed=2)
+    prio = evaluate("priority", DEV, [hpa, hpb], horizon=6.0, seed=2)
+    p99_lith = lith.client("hpA").p99
+    p99_prio = prio.client("hpA").p99
+    assert p99_lith < p99_prio, (p99_lith, p99_prio)
+    assert p99_lith < 5 * ideal
+
+
+def test_mig_cannot_run_best_effort():
+    res = evaluate("mig", DEV, [hp_app(), be_train()], horizon=2.0, seed=0)
+    assert res.client("be").n_completed == 0
+    assert res.client("hp").n_completed > 0
+
+
+def test_reef_gates_be_when_hp_active():
+    """REEF (paper re-implementation): BE only runs in HP-idle gaps, so BE
+    throughput positive but HP tails bounded by one BE kernel."""
+    res = evaluate("reef", DEV, [hp_app(rps=5.0), be_train()],
+                   horizon=4.0, seed=0)
+    assert res.client("be").n_completed >= 0
+    assert res.client("hp").n_completed > 0
+
+
+def test_lithos_stealing_work_conservation():
+    """BE makes progress on idle HP quota slices; HP keeps its tails."""
+    apps = [hp_app(rps=5.0), be_train()]
+    steal = evaluate("lithos", DEV, apps, horizon=4.0, seed=3)
+    from repro.core.scheduler import LithOSConfig
+    nosteal = evaluate("lithos", DEV, apps, horizon=4.0, seed=3,
+                       lithos_config=LithOSConfig(steal=False))
+    assert steal.client("be").n_completed > nosteal.client("be").n_completed
+
+
+def test_hol_ordering_matches_paper():
+    """HP tail latency: lithos < mps when stacked with long-kernel BE
+    (Fig 16's qualitative result)."""
+    apps = [hp_app(rps=10.0), be_train()]
+    lith = evaluate("lithos", DEV, apps, horizon=4.0, seed=4)
+    mps = evaluate("mps", DEV, apps, horizon=4.0, seed=4)
+    assert lith.client("hp").p99 < mps.client("hp").p99
+
+
+def test_quotas_from_apps_partition():
+    apps = [hp_app(name="a"), hp_app(name="b"), be_train()]
+    q = quotas_from_apps(DEV, apps)
+    assert q[0].slices + q[1].slices <= DEV.n_slices
+    assert q[2].slices == 0
+    assert q[0].priority == Priority.HIGH
+
+
+def test_energy_accounting_positive_and_bounded():
+    res = evaluate("lithos", DEV, [hp_app(rps=5.0)], horizon=2.0, seed=0)
+    p_min = DEV.power(0, 1.0)
+    p_max = DEV.power(DEV.n_slices, 1.0)
+    assert p_min * 2.0 <= res.energy <= p_max * 2.0
+
+
+def test_deterministic_given_seed():
+    apps = [hp_app(rps=10.0), be_train()]
+    a = evaluate("lithos", DEV, apps, horizon=2.0, seed=7)
+    b = evaluate("lithos", DEV, apps, horizon=2.0, seed=7)
+    assert a.client("hp").latencies == b.client("hp").latencies
+    assert a.energy == pytest.approx(b.energy)

@@ -1,0 +1,234 @@
+"""Substrate tests: data pipeline, optimizer (incl. int8 moments +
+compression), checkpointing (crash consistency, elastic restore),
+serving engine, distributed coordinator, elastic mesh math."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.sharded import (CheckpointManager, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.coordinator import (Coordinator, CoordinatorConfig,
+                                           HostState)
+from repro.distributed.elastic import elastic_mesh_shapes, survivors
+from repro.optim.optimizers import (AdamWConfig, QTensor, adamw_init,
+                                    adamw_update, dequantize, quantize)
+from repro.serve.engine import ServeConfig, SlotServer
+from repro.train.step import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_packed():
+    dc = DataConfig(vocab_size=1000, seq_len=64, global_batch=4, seed=3)
+    a = next(SyntheticLM(dc).batches())
+    b = next(SyntheticLM(dc).batches())
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 64)
+    # labels are next-token shifted
+    rows = next(SyntheticLM(dc).packed_rows(0, 1))
+    np.testing.assert_array_equal(rows[:, 1:],
+                                  np.where(a["labels"] >= 0, a["labels"],
+                                           rows[:, 1:]))
+
+
+def test_data_shards_disjoint_streams():
+    dc = DataConfig(vocab_size=1000, seq_len=32, global_batch=8, seed=0)
+    s0 = next(SyntheticLM(dc).batches(shard=0, n_shards=2))
+    s1 = next(SyntheticLM(dc).batches(shard=1, n_shards=2))
+    assert s0["tokens"].shape == (4, 32)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 4000), st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_error_bound(n, scale):
+    x = (np.random.default_rng(n).standard_normal(n) * scale).astype(
+        np.float32)
+    q = quantize(jnp.asarray(x))
+    d = np.asarray(dequantize(q))
+    blocks = -(-n // 256)
+    for b in range(blocks):
+        blk = x[b * 256:(b + 1) * 256]
+        step = np.abs(blk).max() / 127.0
+        np.testing.assert_allclose(d[b * 256:(b + 1) * 256], blk,
+                                   atol=step / 2 + 1e-9)
+
+
+def test_adamw_quadratic_convergence():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}        # d/dw w^2
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "bfloat16", "int8"])
+def test_train_features_converge(moment_dtype):
+    cfg = get_config("olmo-1b").reduced()
+    tc = TrainConfig(moment_dtype=moment_dtype, n_micro=2,
+                     grad_compress=(moment_dtype == "int8"))
+    init_state, step = make_train_step(cfg, tc)
+    state = init_state(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                  global_batch=4, seed=0)).batches()
+    jstep = jax.jit(step)
+    losses = []
+    for _ in range(6):
+        b = next(data)
+        state, m = jstep(state, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] + 0.1
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree_eq(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    for x, y in zip(fa, fb):
+        xx = np.asarray(x)
+        yy = np.asarray(y)
+        if xx.dtype.kind == "V" or str(xx.dtype) == "bfloat16":
+            xx, yy = xx.astype(np.float32), yy.astype(np.float32)
+        if not np.allclose(xx, yy):
+            return False
+    return True
+
+
+def test_checkpoint_roundtrip_and_gc():
+    cfg = get_config("olmo-1b").reduced()
+    init_state, _ = make_train_step(cfg, TrainConfig(moment_dtype="int8"))
+    state = init_state(jax.random.PRNGKey(1))
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(state, s)
+        mgr.wait_all()
+        assert latest_step(d) == 4
+        kept = sorted(n for n in os.listdir(d) if n.startswith("step_"))
+        assert kept == ["step_3", "step_4"]
+        restored = mgr.restore(state)
+        assert _tree_eq(state, restored)
+
+
+def test_checkpoint_crash_consistency():
+    """A step dir without COMMIT is never considered restorable."""
+    state = {"w": jnp.arange(8, dtype=jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        h = save_checkpoint(state, d, 5, async_write=False)
+        h.wait()
+        os.makedirs(os.path.join(d, "step_9"))      # torn write, no COMMIT
+        assert latest_step(d) == 5
+        restored = restore_checkpoint(state, d)
+        assert _tree_eq(state, restored)
+
+
+def test_checkpoint_elastic_restore_smaller_template_fails_loudly():
+    state = {"w": jnp.zeros((4, 4)), "b": jnp.zeros(4)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(state, d, 1, async_write=False).wait()
+        bad = {"w": jnp.zeros((4, 4))}
+        with pytest.raises(AssertionError):
+            restore_checkpoint(bad, d)
+
+
+# ---------------------------------------------------------------------------
+# Serving engine
+# ---------------------------------------------------------------------------
+
+def test_slotserver_matches_sequential_decode():
+    """Continuous batching must produce the same tokens as serving each
+    request alone (greedy decoding, same params)."""
+    cfg = get_config("llama3-8b").reduced()
+    sc = ServeConfig(max_slots=3, max_len=48, max_new_tokens=6)
+    srv = SlotServer(cfg, serve_cfg=sc, seed=0)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, 200, int(rng.integers(4, 16))).astype(np.int32)
+               for _ in range(5)]
+    for p in prompts:
+        srv.submit(p, max_new_tokens=6)
+    done = sorted(srv.run_until_drained(), key=lambda r: r.rid)
+
+    for i, p in enumerate(prompts):
+        solo = SlotServer(cfg, params=srv.params, serve_cfg=sc)
+        solo.submit(p, max_new_tokens=6)
+        ref = solo.run_until_drained()[0]
+        assert done[i].output == ref.output, i
+
+
+def test_slotserver_slot_reuse_under_load():
+    cfg = get_config("olmo-1b").reduced()
+    srv = SlotServer(cfg, serve_cfg=ServeConfig(max_slots=2, max_len=32,
+                                                max_new_tokens=4))
+    for i in range(7):
+        srv.submit(np.arange(2, 8, dtype=np.int32), max_new_tokens=3)
+    done = srv.run_until_drained()
+    assert len(done) == 7
+
+
+# ---------------------------------------------------------------------------
+# Coordinator / elastic
+# ---------------------------------------------------------------------------
+
+def test_coordinator_failure_state_machine():
+    clock = [0.0]
+    coord = Coordinator(4, CoordinatorConfig(suspect_after=10, fail_after=30),
+                        clock=lambda: clock[0])
+    failed = []
+    coord.on_fail = failed.extend
+    for t in range(0, 50, 5):
+        clock[0] = float(t)
+        for h in (0, 1, 2):                 # host 3 goes silent
+            coord.heartbeat(h)
+        coord.check()
+    assert coord.hosts[3].state == HostState.FAILED
+    assert failed == [3]
+    assert sorted(coord.alive()) == [0, 1, 2]
+
+
+def test_coordinator_straggler_detection_and_recovery():
+    clock = [0.0]
+    coord = Coordinator(4, CoordinatorConfig(straggler_factor=1.5),
+                        clock=lambda: clock[0])
+    flagged = []
+    coord.on_straggler = flagged.append
+    for step in range(6):
+        clock[0] += 1.0
+        for h in range(4):
+            coord.report_step(h, 1.0 if h != 2 else 2.5)
+        coord.check()
+    assert coord.hosts[2].state == HostState.STRAGGLER
+    assert flagged == [2]
+    for step in range(8):                   # host 2 recovers
+        clock[0] += 1.0
+        for h in range(4):
+            coord.report_step(h, 1.0)
+        coord.check()
+    assert coord.hosts[2].state == HostState.HEALTHY
+
+
+def test_elastic_mesh_shapes():
+    assert elastic_mesh_shapes(256, 16) == (16, 16)
+    assert elastic_mesh_shapes(240, 16) == (15, 16)     # lost one host row
+    assert elastic_mesh_shapes(8, 16) is None           # no full replica
+    assert elastic_mesh_shapes(512, 16, pods=2) == (2, 16, 16)
+    devs = list(range(32))
+    surv = survivors(devs, failed_hosts=[1], devices_per_host=8)
+    assert len(surv) == 24 and 8 not in surv
