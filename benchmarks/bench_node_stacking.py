@@ -1,0 +1,108 @@
+"""Node-scale stacking: multi-device placement × system comparison.
+
+Scales the paper's single-GPU stacking studies (Figs 13–16) to a
+multi-device node: N A100-calibrated devices, 4+ tenants mixing calibrated
+HP inference services (inference stacking) with closed-loop BE trainers
+(hybrid stacking), routed by the node layer's placement policies.
+
+Reports, per (router, system):
+  * HP SLO attainment and P99 per service
+  * BE throughput (fractional kernel counting — short horizons)
+  * node utilization and energy
+  * the placement each router chose
+
+Headline expectations: lithos beats mps on HP tails at equal BE progress on
+every placement; mig strands BE entirely; an informed router (least_loaded /
+quota_aware) beats round_robin by not co-locating the two heaviest tenants.
+
+    PYTHONPATH=src python benchmarks/bench_node_stacking.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+from benchmarks.scenarios import DEV, fmt_csv, frac_throughput, \
+    node_stacking_apps
+from repro.core.lithos import evaluate
+from repro.core.types import NodeSpec, Priority
+
+SYSTEMS = ["lithos", "mps", "mig"]
+ROUTERS = ["round_robin", "least_loaded", "quota_aware", "affinity"]
+
+
+def run_node(node: NodeSpec, apps, horizon: float, seed: int,
+             rows: list[str], tag: str):
+    for router in ROUTERS:
+        for system in SYSTEMS:
+            res = evaluate(system, node, apps, horizon=horizon, seed=seed,
+                           router=router)
+            placement = "|".join(str(d) for d in res.placement)
+            rows.append(fmt_csv(tag, router, system, "placement",
+                                placement, "app->dev"))
+            hp_slo, be_thr = [], []
+            for app in apps:
+                cm = res.client(app.name)
+                if app.priority == Priority.HIGH:
+                    slo = cm.slo_attainment(app.slo_latency)
+                    hp_slo.append(slo)
+                    rows.append(fmt_csv(tag, router, system,
+                                        f"{app.name}_p99",
+                                        f"{cm.p99 * 1e3:.2f}", "ms"))
+                    rows.append(fmt_csv(tag, router, system,
+                                        f"{app.name}_slo",
+                                        f"{slo * 100:.1f}", "%"))
+                else:
+                    thr = frac_throughput(res, app, app.name, horizon)
+                    be_thr.append(thr)
+                    rows.append(fmt_csv(tag, router, system,
+                                        f"{app.name}_throughput",
+                                        f"{thr:.3f}", "jobs/s"))
+            if system == "lithos":
+                # CI guard: under lithos every HP tenant must make progress
+                # (nan metrics from zero completions would pass silently)
+                starved = [a.name for a in apps
+                           if a.priority == Priority.HIGH
+                           and res.client(a.name).n_completed == 0]
+                if starved:
+                    raise RuntimeError(
+                        f"{tag}/{router}: HP tenants starved under lithos: "
+                        f"{starved}")
+            mean = lambda xs: sum(xs) / max(1, len(xs))
+            rows.append(fmt_csv(tag, router, system, "mean_hp_slo",
+                                f"{mean(hp_slo) * 100:.1f}", "%"))
+            rows.append(fmt_csv(tag, router, system, "agg_be_throughput",
+                                f"{sum(be_thr):.3f}", "jobs/s"))
+            rows.append(fmt_csv(tag, router, system, "node_utilization",
+                                f"{res.utilization * 100:.1f}", "%"))
+            rows.append(fmt_csv(tag, router, system, "node_energy",
+                                f"{res.energy:.0f}", "J"))
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("bench", "router", "system", "metric", "value", "unit")]
+    horizon = 3.0 if quick else 10.0
+    apps4 = node_stacking_apps(DEV, n_hp=2, n_be=2)       # 4 tenants
+    run_node(NodeSpec.uniform(2, DEV), apps4, horizon, 11, rows,
+             "node2x4t")
+    if not quick:
+        apps7 = node_stacking_apps(DEV, n_hp=4, n_be=3)   # 7 tenants
+        run_node(NodeSpec.uniform(3, DEV), apps7, horizon, 11, rows,
+                 "node3x7t")
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizons, 2-device scenario only")
+    args = ap.parse_args()
+    run(quick=args.smoke)

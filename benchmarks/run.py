@@ -23,6 +23,7 @@ MODULES = [
     ("fig20_atomization", "benchmarks.bench_atomization"),
     ("sec7.4_predictor", "benchmarks.bench_predictor"),
     ("pallas_atoms", "benchmarks.bench_pallas_atoms"),
+    ("node_stacking", "benchmarks.bench_node_stacking"),
 ]
 
 

@@ -87,6 +87,34 @@ def fmt_csv(*cols) -> str:
     return ",".join(str(c) for c in cols)
 
 
+# -- multi-device node scenarios (node layer benchmarks) --------------------
+
+def node_stacking_apps(device=DEV, *, n_hp: int = 3,
+                       n_be: int = 2) -> list:
+    """A multi-tenant node mix: HP inference services with calibrated loads
+    and SLOs (inference stacking) plus closed-loop BE trainers (hybrid
+    stacking).  Per-device quotas stay derived (each device splits itself
+    among the HP tenants the router places there)."""
+    hp = hp_services()
+    be = be_trainers()
+    # short-service apps first so small-n_hp (smoke) scenarios complete
+    # jobs within short horizons; the heavy LLM tenants join at n_hp >= 3
+    pool = [
+        calibrated(replace(hp["resnet"], name="hpA"), 0.45,
+                   device=device, slo_mult=4.0),
+        calibrated(replace(hp["bert"], name="hpB"), 0.35,
+                   device=device, slo_mult=4.0),
+        calibrated(replace(hp["llama3"], name="hpC", decode_tokens=6), 0.25,
+                   device=device, slo_mult=8.0),
+        calibrated(replace(hp["gptj"], name="hpD", decode_tokens=6), 0.2,
+                   device=device, slo_mult=8.0),
+    ]
+    trainers = [replace(be["olmo_train"], name="beA"),
+                replace(be["llama_ft"], name="beB"),
+                replace(be["xlstm_train"], name="beC")]
+    return pool[:n_hp] + trainers[:n_be]
+
+
 def calibrated_solo_run(app: AppSpec, lithos_config, *, horizon: float,
                         cal_horizon: float, seed: int, device=DEV):
     """Two-phase solo run: a calibration sim lets the predictor /
@@ -125,7 +153,8 @@ def frac_throughput(res, app: AppSpec, cid_name: str, horizon: float) -> float:
     import numpy as np
     rng = np.random.default_rng((0, app.seed, 0))
     per_job = max(1, len(app.job_trace(rng)))
-    cid = next(i for i, c in enumerate(res.clients) if c.name == cid_name)
+    # client ids are node-global and need not equal list position
+    cid = next(c.cid for c in res.clients if c.name == cid_name)
     kernels = sum(1 for r in res.records
                   if r.task.client_id == cid and r.task.atom_of is None)
     atoms = {}

@@ -1,11 +1,14 @@
 """LithOS control plane: the paper's contribution, as a composable library.
 
-Layers (DESIGN.md §2-3):
+Layers (DESIGN.md §2-3, §5):
   execution plane — real JAX models/kernels (repro.models, repro.kernels)
-  control plane   — scheduler/atomizer/rightsizer/DVFS/predictor (here)
+  control plane   — scheduler/atomizer/rightsizer/DVFS/predictor (here),
+                    backed by the SliceMap resource subsystem (slices.py)
   timing plane    — calibrated discrete-event simulator (simulator.py)
+  node layer      — multi-device placement/routing (node.py) over NodeSpec
 """
 from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
-                              KernelWork, Priority, Quota)
+                              KernelWork, NodeSpec, Priority, Quota)
 from repro.core.costmodel import CostModel
 from repro.core.lithos import SYSTEMS, evaluate, run_alone
+from repro.core.slices import SliceMap

@@ -18,6 +18,7 @@ from typing import Optional
 from repro.core.costmodel import CostModel
 from repro.core.queues import Client
 from repro.core.simulator import ExecKernel, Policy
+from repro.core.slices import SliceMap
 from repro.core.types import CompletionRecord, Priority
 
 
@@ -122,12 +123,23 @@ class MPSPolicy(FIFOPolicyBase):
 class MIGPolicy(FIFOPolicyBase):
     """Static spatial partitions; clients without a partition never run and
     idle partition capacity cannot be donated (the MIG waste the paper
-    quantifies)."""
+    quantifies).
+
+    Runs on the same :class:`SliceMap` subsystem as LithOS but only ever
+    acquires from its own partition — stealing is structurally impossible,
+    so the subsystem's conservation checks double as a no-donation proof.
+    """
 
     name = "mig"
 
     def __init__(self, partitions: dict[int, int]):
         self.partitions = partitions
+        self.slices: SliceMap = None
+
+    def attach(self, sim):
+        super().attach(sim)
+        self.slices = SliceMap.from_partitions(sim.device.n_slices,
+                                               self.partitions)
 
     def admit(self, c: Client, now: float) -> bool:
         return self.partitions.get(c.cid, 0) > 0
@@ -137,10 +149,18 @@ class MIGPolicy(FIFOPolicyBase):
             task = c.peek()
             if task is None or not self.admit(c, now):
                 continue
-            part = self.partitions[c.cid]
+            own = self.slices.idle_owned(c.cid)
+            if not own:
+                continue
             cap = self.sim.cost.phases(task.work).max_useful_slices
             c.pop()
-            self.sim.start_kernel(c, task, min(cap, part))
+            chosen = tuple(own[:cap])
+            self.slices.acquire(chosen, task.kid, c.cid, now)
+            self.sim.start_kernel(c, task, len(chosen), slice_set=chosen)
+
+    def on_complete(self, ek: ExecKernel, rec: CompletionRecord):
+        self.slices.release(ek.task.kid, rec.t_end)
+        super().on_complete(ek, rec)
 
     def allocations(self, now: float) -> dict[int, int]:
         return {ek.task.kid: ek.slices
@@ -167,15 +187,22 @@ class TimeSlicePolicy(FIFOPolicyBase):
         self.tick_interval = quantum
         self.turn = 0
 
+    def _turn_cid(self) -> int:
+        # ``turn`` indexes the client list; compare by cid (client ids are
+        # node-global and need not be 0..n-1)
+        clients = self.sim.clients
+        return clients[self.turn % len(clients)].cid if clients else -1
+
     def step(self, now: float):
         # dispatch without a global free check: frozen kernels hold nothing
+        turn_cid = self._turn_cid()
         for c in self._order():
             task = c.peek()
             if task is None:
                 continue
             c.pop()
             cap = self.sim.cost.phases(task.work).max_useful_slices
-            s = min(cap, self.sim.device.n_slices) if c.cid == self.turn else 0
+            s = min(cap, self.sim.device.n_slices) if c.cid == turn_cid else 0
             self.sim.start_kernel(c, task, s)
 
     def on_tick(self, now: float):
@@ -189,9 +216,10 @@ class TimeSlicePolicy(FIFOPolicyBase):
                 break
 
     def allocations(self, now: float) -> dict[int, int]:
+        turn_cid = self._turn_cid()
         return {ek.task.kid:
                 (min(self.sim.device.n_slices, ek.phases.max_useful_slices)
-                 if ek.client.cid == self.turn else 0)
+                 if ek.client.cid == turn_cid else 0)
                 for ek in self.sim.in_flight.values()}
 
 

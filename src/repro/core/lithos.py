@@ -13,36 +13,61 @@ from typing import Optional
 from repro.core import baselines
 from repro.core.scheduler import LithOSConfig, LithOSScheduler
 from repro.core.simulator import Policy, SimResult, Simulator
-from repro.core.types import DeviceSpec, Priority, Quota
+from repro.core.types import DeviceSpec, NodeSpec, Priority, Quota
 from repro.core.workloads import AppSpec
 
 SYSTEMS = ("lithos", "mps", "mig", "limits", "timeslice", "priority",
            "reef", "tgs", "orion")
 
 
-def quotas_from_apps(device: DeviceSpec,
-                     apps: list[AppSpec]) -> dict[int, Quota]:
+def quotas_from_apps(device: DeviceSpec, apps: list[AppSpec],
+                     cids: Optional[list[int]] = None) -> dict[int, Quota]:
     """Derive per-client quotas: explicit quota_slices if given, else split
-    the device proportionally among HP apps (BE gets 0 — it runs on steal)."""
-    quotas: dict[int, Quota] = {}
-    hp = [i for i, a in enumerate(apps) if a.priority == Priority.HIGH]
-    explicit = sum(a.quota_slices for a in apps)
-    left = device.n_slices - explicit
-    for i, a in enumerate(apps):
-        s = a.quota_slices
-        if s == 0 and a.priority == Priority.HIGH and hp:
-            s = max(1, left // len(hp))
-        quotas[i] = Quota(s, a.priority)
-    return quotas
+    the device proportionally among HP apps (BE gets 0 — it runs on steal).
+
+    Quotas are guarantees, so they must be *coverable*: the running total
+    never exceeds ``device.n_slices``.  Explicit quotas are reserved first
+    (clamped to the device, in list order), then derived HP shares are
+    handed out from whatever remains — an explicit request that fits on its
+    own is never degraded to cover a derived share, and an oversubscribed
+    request degrades to what is left rather than silently promising
+    capacity that does not exist.
+    """
+    if cids is None:
+        cids = list(range(len(apps)))
+    cap = device.n_slices
+    hp = [a for a in apps if a.priority == Priority.HIGH]
+    slices: dict[int, int] = {}
+    total = 0
+    for cid, a in zip(cids, apps):        # pass 1: explicit guarantees
+        if a.quota_slices > 0:
+            s = min(a.quota_slices, cap - total)
+            slices[cid] = s
+            total += s
+    left = cap - total
+    share = max(1, left // len(hp)) if (hp and left > 0) else 0
+    for cid, a in zip(cids, apps):        # pass 2: derived HP shares
+        if cid in slices:
+            continue
+        s = share if a.priority == Priority.HIGH else 0
+        s = min(s, cap - total)
+        slices[cid] = s
+        total += s
+    return {cid: Quota(slices[cid], a.priority)
+            for cid, a in zip(cids, apps)}
 
 
 def partitions_from_apps(device: DeviceSpec, apps: list[AppSpec],
-                         gpc_granularity: int = 0) -> dict[int, int]:
+                         gpc_granularity: int = 0,
+                         cids: Optional[list[int]] = None) -> dict[int, int]:
     """MIG-style partitions: HP apps only, rounded to GPC boundaries."""
-    quotas = quotas_from_apps(device, apps)
+    if cids is None:
+        cids = list(range(len(apps)))
+    quotas = quotas_from_apps(device, apps, cids=cids)
+    prio = {cid: a.priority for cid, a in zip(cids, apps)}
     parts = {}
     for cid, q in quotas.items():
-        if apps[cid].priority != Priority.HIGH:
+        if prio[cid] != Priority.HIGH:
             continue
         s = q.slices
         if gpc_granularity > 1:
@@ -59,22 +84,39 @@ def partitions_from_apps(device: DeviceSpec, apps: list[AppSpec],
 
 
 def make_policy(system: str, device: DeviceSpec, apps: list[AppSpec], *,
-                lithos_config: Optional[LithOSConfig] = None) -> Policy:
+                lithos_config: Optional[LithOSConfig] = None,
+                cids: Optional[list[int]] = None) -> Policy:
     if system == "lithos":
-        return LithOSScheduler(device, quotas_from_apps(device, apps),
+        return LithOSScheduler(device, quotas_from_apps(device, apps,
+                                                        cids=cids),
                                lithos_config or LithOSConfig())
     if system == "mig":
         return baselines.MIGPolicy(
             partitions_from_apps(device, apps,
-                                 gpc_granularity=device.n_slices // 8))
+                                 gpc_granularity=device.n_slices // 8,
+                                 cids=cids))
     if system == "limits":
-        return baselines.LimitsPolicy(partitions_from_apps(device, apps))
+        return baselines.LimitsPolicy(
+            partitions_from_apps(device, apps, cids=cids))
     return baselines.make_baseline(system)
 
 
-def evaluate(system: str, device: DeviceSpec, apps: list[AppSpec], *,
+def evaluate(system: str, device, apps: list[AppSpec], *,
              horizon: float = 30.0, seed: int = 0,
-             lithos_config: Optional[LithOSConfig] = None) -> SimResult:
+             lithos_config: Optional[LithOSConfig] = None,
+             router: str = "least_loaded"):
+    """Run one system over one workload mix.
+
+    ``device`` may be a :class:`DeviceSpec` (single-device path, returns a
+    :class:`SimResult`) or a :class:`NodeSpec` (multi-device path: the node
+    layer routes tenants across devices with ``router`` and returns a
+    ``NodeResult``; a 1-device node reproduces the DeviceSpec path
+    bit-for-bit)."""
+    if isinstance(device, NodeSpec):
+        from repro.core.node import evaluate_node
+        return evaluate_node(system, device, apps, horizon=horizon,
+                             seed=seed, lithos_config=lithos_config,
+                             router=router)
     policy = make_policy(system, device, apps, lithos_config=lithos_config)
     sim = Simulator(device, apps, policy, horizon=horizon, seed=seed)
     res = sim.run()

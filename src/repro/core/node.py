@@ -1,0 +1,210 @@
+"""Node layer: placement/routing of tenants across a multi-device node.
+
+The paper's control plane manages one GPU; production serving runs fleets.
+This layer generalizes the timing plane to a :class:`NodeSpec` of N devices:
+each device runs its *own* policy instance (own SliceMap, quotas, predictor,
+governor — no hidden cross-device state), and a router decides which device
+each tenant's launch queue is pinned to.  Placement is per-client, not
+per-job: a client's stream lives on one device for the simulation, matching
+how serving frameworks pin model replicas (cross-device migration is the
+elastic follow-on in the ROADMAP).
+
+Router policies:
+
+* ``round_robin``   — arrival-order striping; the no-information baseline.
+* ``least_loaded``  — greedy bin-packing of estimated demand (service
+  seconds/second from the cost model; closed-loop trainers count as a full
+  device since they soak whatever they are given), largest first, onto the
+  device with the lowest capacity-normalized load.
+* ``quota_aware``   — place by guarantee headroom: HP tenants go where their
+  quota still fits un-oversubscribed (largest quota first); BE tenants are
+  spread by count (they run on stolen capacity, so one per device beats two
+  on one).
+* ``affinity``      — tenants sharing a model architecture co-locate
+  (predictor/right-sizer state is per-(queue, ordinal): co-located replicas
+  of one model warm the same operating regime), groups balanced by load.
+
+Client ids are node-global (the original app order), so a tenant keeps the
+same workload random stream under every placement — router comparisons see
+identical arrivals, not resampled ones.
+"""
+from __future__ import annotations
+
+from repro.core.simulator import SimResult, Simulator
+from repro.core.types import NodeSpec, Priority
+from repro.core.workloads import AppSpec, mean_demand
+
+ROUTERS = ("round_robin", "least_loaded", "quota_aware", "affinity")
+
+
+_demand_cache: dict[tuple, float] = {}
+
+
+def demand_estimate(app: AppSpec, device) -> float:
+    """Expected device-utilization fraction of one tenant (cost-model based,
+    the same calibration the benchmarks use).  Load-based routers price
+    demand on ``devices[0]`` and normalize loads by each device's capacity
+    (`_argmin_load`), which is exact for homogeneous nodes and proportional
+    for heterogeneous ones.  Memoized: mean_demand samples whole job traces
+    through the cost model and is invariant per (workload, device)."""
+    if app.kind == "train" or app.rps <= 0:
+        return 1.0                       # closed loop: soaks a device
+    key = (app.name, app.cfg.name, app.kind, app.batch, app.fusion,
+           tuple(app.prompt_mix), app.decode_tokens, app.seed, app.rps,
+           device)            # DeviceSpec is frozen: full profile, not just
+                              # n_slices (cost model prices flops/bw too)
+    if key not in _demand_cache:
+        _demand_cache[key] = min(1.0, app.rps * mean_demand(app, device))
+    return _demand_cache[key]
+
+
+def _argmin_load(loads: list[float], node: NodeSpec) -> int:
+    """Device with the lowest capacity-normalized load (ties: lowest id)."""
+    base = node.devices[0].n_slices
+    return min(range(node.n_devices),
+               key=lambda d: (loads[d] * base / node.devices[d].n_slices, d))
+
+
+def _effective_quota(app: AppSpec, node: NodeSpec, n_hp: int, d: int = 0,
+                     headroom: int = None) -> int:
+    """A-priori estimate of the guarantee ``app`` would need on device ``d``.
+
+    Explicit quotas are exact: ``quotas_from_apps`` reserves them first,
+    clamped to the device.  Derived HP shares depend on the final
+    co-placement (they split whatever the explicit reservations leave), so
+    the router estimates them from the device's *unreserved headroom* at
+    decision time, divided by the node-wide HP count — conservative, and it
+    tracks the reserve-explicit-first structure of ``quotas_from_apps``
+    without duplicating its arithmetic against a fixed capacity."""
+    dev = node.devices[d]
+    if app.quota_slices > 0:
+        return min(app.quota_slices, dev.n_slices)
+    if app.priority == Priority.HIGH:
+        cap = dev.n_slices if headroom is None else max(0, headroom)
+        return cap // max(1, n_hp)
+    return 0
+
+
+def place(node: NodeSpec, apps: list[AppSpec],
+          router: str = "least_loaded") -> list[int]:
+    """Return the device index for each app.  Deterministic."""
+    if router not in ROUTERS:
+        raise ValueError(f"unknown router {router!r} (choose from {ROUTERS})")
+    n = node.n_devices
+    if n == 1:
+        return [0] * len(apps)
+    if router == "round_robin":
+        return [i % n for i in range(len(apps))]
+
+    placement = [0] * len(apps)
+    if router == "least_loaded":
+        demands = [demand_estimate(a, node.devices[0]) for a in apps]
+        loads = [0.0] * n
+        for i in sorted(range(len(apps)), key=lambda i: (-demands[i], i)):
+            d = _argmin_load(loads, node)
+            placement[i] = d
+            loads[d] += demands[i]
+        return placement
+
+    if router == "quota_aware":
+        n_hp = sum(1 for a in apps if a.priority == Priority.HIGH)
+        # quota demand is sized per target device (devices may differ),
+        # derived shares against the headroom left after reservations
+        headroom = [dev.n_slices for dev in node.devices]
+        quota_on = lambda i, d: _effective_quota(apps[i], node, n_hp, d,
+                                                 headroom=headroom[d])
+        be_count = [0] * n
+        hp_order = sorted((i for i, a in enumerate(apps)
+                           if a.priority == Priority.HIGH),
+                          key=lambda i: (-max(_effective_quota(
+                              apps[i], node, n_hp, d) for d in range(n)), i))
+        for i in hp_order:
+            # device where the guarantee still fits; else most headroom
+            fits = [d for d in range(n) if headroom[d] >= quota_on(i, d)]
+            cands = fits or range(n)
+            d = min(cands, key=lambda d: (-headroom[d], d))
+            placement[i] = d
+            headroom[d] -= quota_on(i, d)
+        for i, a in enumerate(apps):
+            if a.priority == Priority.HIGH:
+                continue
+            d = min(range(n), key=lambda d: (be_count[d], -headroom[d], d))
+            placement[i] = d
+            be_count[d] += 1
+        return placement
+
+    if router == "affinity":
+        groups: dict[str, list[int]] = {}
+        for i, a in enumerate(apps):
+            groups.setdefault(a.cfg.name, []).append(i)
+        demands = [demand_estimate(a, node.devices[0]) for a in apps]
+        gload = {g: sum(demands[i] for i in ids) for g, ids in groups.items()}
+        loads = [0.0] * n
+        for g in sorted(groups, key=lambda g: (-gload[g], g)):
+            d = _argmin_load(loads, node)
+            for i in groups[g]:
+                placement[i] = d
+            loads[d] += gload[g]
+        return placement
+
+    raise AssertionError(f"unhandled router {router!r}")  # ROUTERS is closed
+
+
+class NodeResult:
+    """Aggregated result of one node run: per-device :class:`SimResult`s
+    plus node-level metrics with the same read surface as a SimResult
+    (``client(name)``, ``clients``, ``energy``, ``utilization``,
+    ``records``)."""
+
+    def __init__(self, node: NodeSpec, router: str, placement: list[int],
+                 results: list[SimResult], policies: list):
+        self.node = node
+        self.router = router
+        self.placement = placement
+        self.per_device = results
+        self.policies = policies
+        self.policy = policies[0] if policies else None
+        self.horizon = results[0].horizon
+        self.policy_name = results[0].policy_name
+        self.energy = sum(r.energy for r in results)
+        self.busy_slice_seconds = sum(r.busy_slice_seconds for r in results)
+        self.records = [rec for r in results for rec in r.records]
+        self.clients = sorted((c for r in results for c in r.clients),
+                              key=lambda c: c.cid)
+
+    @property
+    def utilization(self) -> float:
+        return self.busy_slice_seconds / (self.horizon
+                                          * self.node.total_slices)
+
+    def client(self, name: str):
+        return next(c for c in self.clients if c.name == name)
+
+    def device_of(self, name: str) -> int:
+        """Device index a named client was placed on."""
+        cid = self.client(name).cid
+        return self.placement[cid]
+
+
+def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
+                  horizon: float = 30.0, seed: int = 0,
+                  lithos_config=None, router: str = "least_loaded"
+                  ) -> NodeResult:
+    """Route ``apps`` across the node, run one simulator + policy instance
+    per device, aggregate.  Devices are independent under static placement,
+    so per-device runs share nothing but the seed."""
+    from repro.core.lithos import make_policy
+
+    placement = place(node, apps, router)
+    results: list[SimResult] = []
+    policies = []
+    for d, dev in enumerate(node.devices):
+        idx = [i for i, p in enumerate(placement) if p == d]
+        dev_apps = [apps[i] for i in idx]
+        policy = make_policy(system, dev, dev_apps,
+                             lithos_config=lithos_config, cids=idx)
+        sim = Simulator(dev, dev_apps, policy, horizon=horizon, seed=seed,
+                        cids=idx)
+        results.append(sim.run())
+        policies.append(policy)
+    return NodeResult(node, router, placement, results, policies)

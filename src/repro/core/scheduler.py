@@ -32,6 +32,7 @@ from repro.core.predictor import LatencyPredictor
 from repro.core.queues import Client
 from repro.core.rightsizer import RightSizer
 from repro.core.simulator import ExecKernel, Policy
+from repro.core.slices import SliceMap
 from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
                               Priority, Quota)
 
@@ -78,20 +79,16 @@ class LithOSScheduler(Policy):
         self.rightsizer = RightSizer(device.n_slices, device.occupancy,
                                      self.cfg.slip)
         self.governor = DVFSGovernor(device, self.cfg.slip)
-        # slice state
-        self.owner: list[Optional[int]] = [None] * device.n_slices
-        self.holder: list[Optional[int]] = [None] * device.n_slices  # kid
-        self.busy_until = [0.0] * device.n_slices
-        nxt = 0
-        for cid, q in sorted(quotas.items()):
-            for _ in range(q.slices):
-                if nxt < device.n_slices:
-                    self.owner[nxt] = cid
-                    nxt += 1
+        # slice state: ownership, holding, lending live in the SliceMap
+        # subsystem (slices.py) — the scheduler is policy, not bookkeeping
+        self.slices = SliceMap.from_quotas(device.n_slices, quotas)
         self.qstate: dict[int, _QueueState] = {}
-        self.stolen_slice_seconds = 0.0
         self.pred_log: list[tuple[float, float, int]] = []  # (pred, act, prio)
         self._grown: dict[int, int] = {}
+
+    @property
+    def stolen_slice_seconds(self) -> float:
+        return self.slices.stolen_slice_seconds
 
     # -- helpers ------------------------------------------------------------------
 
@@ -118,26 +115,19 @@ class LithOSScheduler(Policy):
           otherwise repeated 1-atom borrows shave every kernel of an
           active HP request and the slowdown compounds through queueing.
         """
-        own, pool, stealable = [], [], []
-        hp_borrower = (self.quotas.get(for_cid, Quota(0)).priority
-                       == Priority.HIGH)
-        for i in range(self.device.n_slices):
-            if self.holder[i] is not None:
-                continue
-            o = self.owner[i]
-            if o == for_cid:
-                own.append(i)
-            elif o is None:
-                pool.append(i)
-            elif self.cfg.steal:
-                oc = self.sim.clients[o]
-                if hp_borrower or not self._has_work(oc):
-                    stealable.append(i)
-        return own + pool + stealable
+        lenders: list[int] = []
+        if self.cfg.steal:
+            hp_borrower = (self.quotas.get(for_cid, Quota(0)).priority
+                           == Priority.HIGH)
+            for o in self.slices.owners():
+                if o == for_cid:
+                    continue
+                if hp_borrower or not self._has_work(self.sim.client_by_id[o]):
+                    lenders.append(o)
+        return self.slices.free_for(for_cid, lenders=lenders)
 
     def _n_own_idle(self, cid: int) -> int:
-        return sum(1 for i in range(self.device.n_slices)
-                   if self.owner[i] == cid and self.holder[i] is None)
+        return self.slices.n_own_idle(cid)
 
     # -- planning -------------------------------------------------------------------
 
@@ -190,14 +180,11 @@ class LithOSScheduler(Policy):
                 return False
         atom = qs.atoms.popleft()
         chosen = tuple(free[:want])
-        stolen = any(self.owner[i] not in (c.cid, None) for i in chosen)
         n_atoms = atom.atom_of[2] if atom.atom_of else 1
         pred = self.predictor.predict(atom, want, self.governor.current_f,
                                       n_atoms=n_atoms)
         eta = pred if pred is not None else UNSEEN_DEFAULT_LATENCY
-        for i in chosen:
-            self.holder[i] = atom.kid
-            self.busy_until[i] = now + eta
+        stolen = self.slices.acquire(chosen, atom.kid, c.cid, now, eta=eta)
         ek = self.sim.start_kernel(c, atom, len(chosen), slice_set=chosen,
                                    stolen=stolen)
         qs.in_flight_kid = atom.kid
@@ -247,9 +234,7 @@ class LithOSScheduler(Policy):
             take = tuple(free[:want - ek.slices])
             if not take:
                 continue
-            for i in take:
-                self.holder[i] = ek.task.kid
-                self.busy_until[i] = max(self.busy_until[i], now)
+            self.slices.acquire(take, ek.task.kid, ek.client.cid, now)
             ek.slice_set = tuple(ek.slice_set) + take
             self._grown[ek.task.kid] = ek.slices + len(take)
 
@@ -262,12 +247,9 @@ class LithOSScheduler(Policy):
     def on_complete(self, ek: ExecKernel, rec: CompletionRecord):
         now = rec.t_end
         self._grown.pop(ek.task.kid, None)
-        for i in ek.slice_set:
-            if self.holder[i] == ek.task.kid:
-                self.holder[i] = None
-                self.busy_until[i] = now
+        self.slices.release(ek.task.kid, now)
         if ek.stolen:
-            self.stolen_slice_seconds += rec.latency * rec.slices
+            self.slices.note_stolen_completion(rec.latency, rec.slices)
         self.predictor.observe(rec)
         self.rightsizer.observe(rec)
         self.governor.observe(rec)

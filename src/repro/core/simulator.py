@@ -107,7 +107,11 @@ class Policy:
 
 class Simulator:
     def __init__(self, device: DeviceSpec, apps: list[AppSpec],
-                 policy: Policy, *, horizon: float = 30.0, seed: int = 0):
+                 policy: Policy, *, horizon: float = 30.0, seed: int = 0,
+                 cids: Optional[list[int]] = None):
+        """``cids`` gives each app an explicit client id (default 0..n-1).
+        The node layer passes node-global ids so a tenant keeps the same id
+        (and hence the same workload random stream) under any placement."""
         self.device = device
         self.cost = CostModel(device)
         self.policy = policy
@@ -121,8 +125,12 @@ class Simulator:
         self.energy = 0.0
         self.busy_slice_seconds = 0.0
         self.records: list[CompletionRecord] = []
-        self.clients = [Client(i, a, horizon, seed=seed)
-                        for i, a in enumerate(apps)]
+        if cids is None:
+            cids = list(range(len(apps)))
+        assert len(cids) == len(apps) and len(set(cids)) == len(cids)
+        self.clients = [Client(cid, a, horizon, seed=seed)
+                        for cid, a in zip(cids, apps)]
+        self.client_by_id = {c.cid: c for c in self.clients}
         policy.attach(self)
 
     # -- event plumbing ---------------------------------------------------------
@@ -248,7 +256,7 @@ class Simulator:
             if kind == "end":
                 break
             if kind == "arrival":
-                c = self.clients[payload]
+                c = self.client_by_id[payload]
                 if c.spec.kind != "train":
                     c.pending.append(c.make_job(self.now))
                 c.start_next_job(self.now)
@@ -290,6 +298,7 @@ class ClientMetrics:
     slice_seconds: float
     arrivals: list[float] = None
     horizon: float = 0.0
+    cid: int = -1                       # node-global client id
 
     def _lat(self, warmup: float = 0.0) -> list[float]:
         if warmup <= 0 or not self.arrivals:
@@ -340,7 +349,8 @@ class SimResult:
             n_completed=len(c.completed),
             throughput=c.throughput(sim.horizon),
             latencies=c.latencies(), slice_seconds=c.slice_seconds,
-            arrivals=[j.arrival for j in c.completed], horizon=sim.horizon)
+            arrivals=[j.arrival for j in c.completed], horizon=sim.horizon,
+            cid=c.cid)
             for c in sim.clients]
 
     @property

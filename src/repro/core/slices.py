@@ -1,0 +1,258 @@
+"""SliceMap — the first-class slice-resource subsystem (§4.2–4.3).
+
+The TPC Scheduler's ground truth about the device's core-slices lives here:
+
+* **Ownership** (§4.2): each slice is owned by one client (its quota) or by
+  the shared pool.  Ownership is static for a simulation; re-partitioning is
+  a future elastic-migration concern.
+* **Holding**: a slice is *held* by at most one in-flight kernel/atom (kid).
+  Acquire/release keep incremental idle free-lists per owner plus a pool
+  free-list, so free-slice queries cost O(idle slices of the queried owners)
+  instead of the O(n_slices) full scans the scheduler used to run on every
+  event.
+* **Lending / steal ledger** (§4.3 TPC Stealing): every acquisition of a
+  slice owned by *another* client opens a :class:`LendRecord`; release closes
+  it.  The ledger is the audit trail for conservation tests and the precise
+  per-slice-second accounting (``lent_slice_seconds``).  The paper-facing
+  ``stolen_slice_seconds`` metric keeps its historical semantics (kernel
+  latency × total slices for kernels that dispatched on stolen slices) and is
+  credited by the scheduler via :meth:`note_stolen_completion`.
+* **Per-slice timers**: ``busy_until`` records the predicted completion of
+  the holding atom (from the §4.7 predictor) — when a borrowed slice is due
+  back.  Forward-looking state: no scheduling decision reads the timers yet
+  (the seed scheduler kept them write-only too); cross-device stealing and
+  lend-deadline policies (ROADMAP) are the intended consumers.
+* **Conservation invariants**: :meth:`check` asserts, at any instant, that
+  owned-idle + pool-idle + held partitions the device exactly and that no
+  slice is held by two kernels.
+
+Policies own a SliceMap instance; the simulator never sees it.  MIG/Limits
+use the same subsystem with stealing disabled structurally (they only ever
+acquire from their own partition).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional, Sequence
+
+from repro.core.types import Quota
+
+
+@dataclass
+class LendRecord:
+    """One slice lent across an ownership boundary for one kernel/atom."""
+
+    slice_id: int
+    owner: int                      # lending client
+    borrower: int                   # borrowing client
+    kid: int                        # holding kernel/atom
+    t_start: float
+    t_end: Optional[float] = None   # None while the lend is open
+
+    @property
+    def open(self) -> bool:
+        return self.t_end is None
+
+    @property
+    def duration(self) -> float:
+        return 0.0 if self.t_end is None else self.t_end - self.t_start
+
+
+class SliceMap:
+    """Slice ownership + holding state with incremental free-lists."""
+
+    def __init__(self, n_slices: int):
+        self.n_slices = n_slices
+        self.owner: list[Optional[int]] = [None] * n_slices
+        self.holder: list[Optional[int]] = [None] * n_slices   # holding kid
+        self.busy_until: list[float] = [0.0] * n_slices
+        # incremental free-lists (idle == not held)
+        self._idle_own: dict[int, set[int]] = {}
+        self._idle_pool: set[int] = set(range(n_slices))
+        self._held_by_kid: dict[int, list[int]] = {}
+        # steal/lend accounting
+        self.ledger: list[LendRecord] = []
+        self._open_lends: dict[tuple[int, int], LendRecord] = {}  # (kid, sid)
+        self.lent_slice_seconds = 0.0       # precise, per-slice, from ledger
+        self.stolen_slice_seconds = 0.0     # legacy kernel-level metric
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_quotas(cls, n_slices: int, quotas: dict[int, Quota]) -> "SliceMap":
+        """Assign each client its quota slices in ascending cid order (the
+        historical LithOSScheduler layout), remainder to the pool."""
+        sm = cls(n_slices)
+        nxt = 0
+        for cid, q in sorted(quotas.items()):
+            for _ in range(q.slices):
+                if nxt < n_slices:
+                    sm.assign_owner(nxt, cid)
+                    nxt += 1
+        return sm
+
+    @classmethod
+    def from_partitions(cls, n_slices: int,
+                        partitions: dict[int, int]) -> "SliceMap":
+        """MIG-style: contiguous partitions in ascending cid order; slices
+        beyond the partitioned range stay pool-owned but MIG policies never
+        touch them (the stranded capacity the paper quantifies)."""
+        sm = cls(n_slices)
+        nxt = 0
+        for cid, n in sorted(partitions.items()):
+            for _ in range(n):
+                if nxt < n_slices:
+                    sm.assign_owner(nxt, cid)
+                    nxt += 1
+        return sm
+
+    def assign_owner(self, sid: int, cid: int):
+        assert self.holder[sid] is None, "cannot re-own a held slice"
+        old = self.owner[sid]
+        if old is None:
+            self._idle_pool.discard(sid)
+        else:
+            self._idle_own[old].discard(sid)
+        self.owner[sid] = cid
+        self._idle_own.setdefault(cid, set()).add(sid)
+
+    # -- queries (incremental free-lists) ------------------------------------
+
+    def owners(self) -> list[int]:
+        """Clients owning at least one slice, ascending."""
+        return sorted(self._idle_own.keys())
+
+    def owned_by(self, cid: int) -> int:
+        return sum(1 for o in self.owner if o == cid)
+
+    def idle_owned(self, cid: int) -> list[int]:
+        return sorted(self._idle_own.get(cid, ()))
+
+    def n_own_idle(self, cid: int) -> int:
+        return len(self._idle_own.get(cid, ()))
+
+    def idle_pool(self) -> list[int]:
+        return sorted(self._idle_pool)
+
+    def idle_stealable(self, borrower: int,
+                       lenders: Iterable[int]) -> list[int]:
+        """Idle slices owned by the given (willing) lenders, ascending —
+        matching the historical whole-device-scan ordering."""
+        out: set[int] = set()
+        for o in lenders:
+            if o == borrower:
+                continue
+            out |= self._idle_own.get(o, set())
+        return sorted(out)
+
+    def free_for(self, borrower: int, *, lenders: Iterable[int] = (),
+                 include_pool: bool = True) -> list[int]:
+        """Slice ids the borrower may use right now: its own idle slices,
+        then the idle pool, then idle slices of willing lenders — each group
+        in ascending slice-id order (dispatch preference: own > pool >
+        stolen, so steals are the last resort and return soonest)."""
+        free = self.idle_owned(borrower)
+        if include_pool:
+            free += self.idle_pool()
+        free += self.idle_stealable(borrower, lenders)
+        return free
+
+    def held_by(self, kid: int) -> tuple[int, ...]:
+        return tuple(self._held_by_kid.get(kid, ()))
+
+    # -- transitions ---------------------------------------------------------
+
+    def acquire(self, slice_ids: Sequence[int], kid: int, borrower: int,
+                now: float, eta: Optional[float] = None) -> bool:
+        """Mark slices held by ``kid`` on behalf of ``borrower``.
+
+        ``eta`` (predicted completion latency) sets the per-slice return
+        timer; growth acquisitions pass ``eta=None`` and keep the timer
+        monotone.  Returns True iff any acquired slice is *stolen* (owned by
+        a different client — pool slices are free capacity, not steals).
+        Opens a ledger record per stolen slice.
+        """
+        stolen = False
+        for sid in slice_ids:
+            assert self.holder[sid] is None, (sid, self.holder[sid], kid)
+            o = self.owner[sid]
+            self.holder[sid] = kid
+            self.busy_until[sid] = (now + eta if eta is not None
+                                    else max(self.busy_until[sid], now))
+            if o is None:
+                self._idle_pool.discard(sid)
+            else:
+                self._idle_own[o].discard(sid)
+            self._held_by_kid.setdefault(kid, []).append(sid)
+            if o is not None and o != borrower:
+                stolen = True
+                rec = LendRecord(sid, o, borrower, kid, now)
+                self.ledger.append(rec)
+                self._open_lends[(kid, sid)] = rec
+        return stolen
+
+    def release(self, kid: int, now: float) -> tuple[int, ...]:
+        """Free every slice held by ``kid``; closes its lend records."""
+        freed = self._held_by_kid.pop(kid, [])
+        for sid in freed:
+            assert self.holder[sid] == kid
+            self.holder[sid] = None
+            self.busy_until[sid] = now
+            o = self.owner[sid]
+            if o is None:
+                self._idle_pool.add(sid)
+            else:
+                self._idle_own[o].add(sid)
+            rec = self._open_lends.pop((kid, sid), None)
+            if rec is not None:
+                rec.t_end = now
+                self.lent_slice_seconds += rec.duration
+        return tuple(freed)
+
+    def note_stolen_completion(self, latency: float, slices: int):
+        """Credit the paper-facing steal metric (kernel latency × slices for
+        kernels dispatched on stolen capacity — §7 accounting)."""
+        self.stolen_slice_seconds += latency * slices
+
+    # -- invariants ----------------------------------------------------------
+
+    def counts(self) -> dict[str, int]:
+        held = sum(len(v) for v in self._held_by_kid.values())
+        owned_idle = sum(len(v) for v in self._idle_own.values())
+        return {"owned_idle": owned_idle, "pool_idle": len(self._idle_pool),
+                "held": held,
+                "lent": sum(1 for r in self.ledger if r.open)}
+
+    def check(self):
+        """Conservation: idle ∪ held partitions [0, n_slices); no slice is
+        held twice; free-lists agree with the holder array; open ledger
+        entries match currently-held stolen slices."""
+        held: set[int] = set()
+        for kid, ids in self._held_by_kid.items():
+            for sid in ids:
+                assert sid not in held, f"slice {sid} held twice"
+                assert self.holder[sid] == kid, (sid, kid, self.holder[sid])
+                held.add(sid)
+        idle: set[int] = set()
+        for cid, ids in self._idle_own.items():
+            for sid in ids:
+                assert self.owner[sid] == cid
+                assert sid not in idle
+                idle.add(sid)
+        for sid in self._idle_pool:
+            assert self.owner[sid] is None
+            assert sid not in idle
+            idle.add(sid)
+        assert not (held & idle), held & idle
+        assert len(held) + len(idle) == self.n_slices, (
+            len(held), len(idle), self.n_slices)
+        for sid in idle:
+            assert self.holder[sid] is None, sid
+        open_lends = {(r.kid, r.slice_id) for r in self.ledger if r.open}
+        assert open_lends == set(self._open_lends)
+        for kid, sid in open_lends:
+            assert self.holder[sid] == kid
+            assert self.owner[sid] is not None
+        closed = sum(r.duration for r in self.ledger if not r.open)
+        assert abs(closed - self.lent_slice_seconds) < 1e-9
+        return True

@@ -75,6 +75,38 @@ class DeviceSpec:
                    p_idle=0.4, p_dyn=6.3, p_static_host=40.0)
 
 
+@dataclass(frozen=True)
+class NodeSpec:
+    """A multi-device node: N :class:`DeviceSpec`s behind one control plane.
+
+    Each device runs its own policy instance (per-device quotas, slice maps,
+    predictors); the node-level router (``repro.core.node``) places tenants
+    across devices.  A 1-device node is exactly equivalent to scheduling the
+    bare :class:`DeviceSpec` — the parity contract the node layer's tests
+    enforce."""
+
+    devices: tuple[DeviceSpec, ...]
+    name: str = "node"
+
+    def __post_init__(self):
+        assert len(self.devices) >= 1, "a node needs at least one device"
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def total_slices(self) -> int:
+        return sum(d.n_slices for d in self.devices)
+
+    @classmethod
+    def uniform(cls, n_devices: int,
+                device: Optional[DeviceSpec] = None) -> "NodeSpec":
+        dev = device if device is not None else DeviceSpec()
+        return cls(devices=tuple(dev for _ in range(n_devices)),
+                   name=f"{n_devices}x-node")
+
+
 _kernel_ids = itertools.count()
 
 

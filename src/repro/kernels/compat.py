@@ -1,0 +1,10 @@
+"""JAX version compatibility for the Pallas kernels.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+JAX; support both so the kernels run on the pinned toolchain and on
+freshly-installed CI environments alike.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -105,7 +107,7 @@ def decode_attention_atom(q, k, v, lens, o, *, start: int, num_rows: int,
                         pltpu.VMEM((G, 1), jnp.float32),
                         pltpu.VMEM((G, D), jnp.float32)],
         input_output_aliases={4: 0},
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(lens2, q, k, v, o)

@@ -5,7 +5,12 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:                # only the property tests need hypothesis; plain tests run
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
 
 from repro.core.atomizer import AtomizerConfig, KernelAtomizer, atom_ranges
 from repro.core.costmodel import CostModel
@@ -32,19 +37,23 @@ def rec(task, lat, slices, f=1.0, t0=0.0):
 # Atomizer
 # ---------------------------------------------------------------------------
 
-@given(blocks=st.integers(1, 10_000), pred_ms=st.floats(0.01, 100.0))
-@settings(max_examples=200, deadline=None)
-def test_atomizer_split_partitions_grid(blocks, pred_ms):
-    at = KernelAtomizer()
-    t = mk_task(blocks=blocks)
-    n = at.plan(t, pred_ms * 1e-3)
-    atoms = at.split(t, n)
-    assert sum(a.work.n_blocks for a in atoms) == blocks
-    total_flops = sum(a.work.flops for a in atoms)
-    assert total_flops == pytest.approx(t.work.flops, rel=1e-6)
-    if len(atoms) > 1:
-        for i, a in enumerate(atoms):
-            assert a.atom_of == (t.kid, i, len(atoms))
+if HAS_HYPOTHESIS:
+    @given(blocks=st.integers(1, 10_000), pred_ms=st.floats(0.01, 100.0))
+    @settings(max_examples=200, deadline=None)
+    def test_atomizer_split_partitions_grid(blocks, pred_ms):
+        at = KernelAtomizer()
+        t = mk_task(blocks=blocks)
+        n = at.plan(t, pred_ms * 1e-3)
+        atoms = at.split(t, n)
+        assert sum(a.work.n_blocks for a in atoms) == blocks
+        total_flops = sum(a.work.flops for a in atoms)
+        assert total_flops == pytest.approx(t.work.flops, rel=1e-6)
+        if len(atoms) > 1:
+            for i, a in enumerate(atoms):
+                assert a.atom_of == (t.kid, i, len(atoms))
+else:
+    def test_atomizer_split_partitions_grid():
+        pytest.skip("hypothesis not installed")
 
 
 def test_atomizer_short_kernels_pass_through():
@@ -142,17 +151,21 @@ def test_rightsizer_probe_protocol():
     assert rs.probe_allocation(t, 54) is None       # fitted
 
 
-@given(m=st.floats(1e-4, 1.0), b=st.floats(1e-6, 1e-2),
-       slip=st.floats(1.01, 2.0))
-@settings(max_examples=100, deadline=None)
-def test_rightsizer_decision_never_violates_slip(m, b, slip):
-    rs = RightSizer(full_slices=54, occupancy=8, slip=slip)
-    t = mk_task(blocks=54 * 8)
-    rs.observe(rec(t, m / 54 + b, 54))
-    rs.observe(rec(t, m + b, 1))
-    chosen = rs.decide(t, 54)
-    assert 1 <= chosen <= 54
-    assert m / chosen + b <= slip * (m / 54 + b) * (1 + 1e-9)
+if HAS_HYPOTHESIS:
+    @given(m=st.floats(1e-4, 1.0), b=st.floats(1e-6, 1e-2),
+           slip=st.floats(1.01, 2.0))
+    @settings(max_examples=100, deadline=None)
+    def test_rightsizer_decision_never_violates_slip(m, b, slip):
+        rs = RightSizer(full_slices=54, occupancy=8, slip=slip)
+        t = mk_task(blocks=54 * 8)
+        rs.observe(rec(t, m / 54 + b, 54))
+        rs.observe(rec(t, m + b, 1))
+        chosen = rs.decide(t, 54)
+        assert 1 <= chosen <= 54
+        assert m / chosen + b <= slip * (m / 54 + b) * (1 + 1e-9)
+else:
+    def test_rightsizer_decision_never_violates_slip():
+        pytest.skip("hypothesis not installed")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,204 @@
+"""Node layer: 1-device parity with the single-device path, router
+placement properties, multi-device end-to-end runs, and the
+quota-derivation capacity clamp."""
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.lithos import evaluate, quotas_from_apps
+from repro.core.node import ROUTERS, demand_estimate, place
+from repro.core.types import DeviceSpec, NodeSpec, Priority
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+WHISPER = get_config("whisper-small")
+
+
+def hp_app(rps=20.0, name="hp", cfg=OLMO, quota=0):
+    return AppSpec(name, cfg, "fwd_infer", priority=Priority.HIGH,
+                   rps=rps, prompt_mix=((128, 1.0),), batch=4, fusion=8,
+                   quota_slices=quota)
+
+
+def be_train(name="be", cfg=LLAMA):
+    return AppSpec(name, cfg, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8)
+
+
+# -- 1-device parity (the refactor's bit-for-bit contract) -------------------
+
+@pytest.mark.parametrize("system", ["lithos", "mps", "mig", "limits",
+                                    "reef", "timeslice"])
+def test_one_device_node_parity(system):
+    apps = [hp_app(), be_train()]
+    a = evaluate(system, DEV, apps, horizon=2.0, seed=3)
+    b = evaluate(system, NodeSpec.uniform(1, DEV), apps, horizon=2.0, seed=3)
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.name == cb.name and ca.cid == cb.cid
+        assert ca.latencies == cb.latencies          # exact, not approx
+        assert ca.n_completed == cb.n_completed
+        assert ca.slice_seconds == cb.slice_seconds
+    assert a.energy == b.energy
+    assert a.busy_slice_seconds == b.busy_slice_seconds
+    assert a.utilization == b.utilization
+    assert len(a.records) == len(b.records)
+
+
+@pytest.mark.parametrize("router", ROUTERS)
+def test_one_device_parity_any_router(router):
+    apps = [hp_app(), be_train()]
+    a = evaluate("lithos", DEV, apps, horizon=1.0, seed=0)
+    b = evaluate("lithos", NodeSpec.uniform(1, DEV), apps, horizon=1.0,
+                 seed=0, router=router)
+    assert a.client("hp").latencies == b.client("hp").latencies
+    assert b.placement == [0, 0]
+
+
+# -- routers ----------------------------------------------------------------
+
+def test_routers_deterministic_and_in_range():
+    node = NodeSpec.uniform(3, DEV)
+    apps = [hp_app(name="a"), hp_app(name="b", cfg=WHISPER),
+            be_train(name="c"), be_train(name="d", cfg=OLMO),
+            hp_app(name="e", rps=5.0)]
+    for router in ROUTERS:
+        p1 = place(node, apps, router)
+        p2 = place(node, apps, router)
+        assert p1 == p2
+        assert all(0 <= d < node.n_devices for d in p1)
+        assert len(p1) == len(apps)
+
+
+def test_least_loaded_spreads_trainers():
+    node = NodeSpec.uniform(2, DEV)
+    apps = [be_train(name="t1"), be_train(name="t2")]
+    p = place(node, apps, "least_loaded")
+    assert sorted(p) == [0, 1]             # one soaker per device
+
+
+def test_quota_aware_avoids_oversubscription():
+    node = NodeSpec.uniform(2, DEV)
+    big = DEV.n_slices - 10
+    apps = [hp_app(name="a", quota=big), hp_app(name="b", quota=big),
+            be_train(name="c"), be_train(name="d")]
+    p = place(node, apps, "quota_aware")
+    assert p[0] != p[1]                    # both guarantees fit un-clipped
+    assert sorted(p[2:]) == [0, 1]         # BE spread by count
+
+
+def test_quota_aware_sizes_quotas_per_device():
+    """Heterogeneous node: a guarantee is checked against each device's own
+    capacity, not devices[0]'s."""
+    from dataclasses import replace as dc_replace
+    small = dc_replace(DEV, n_slices=27)
+    node = NodeSpec(devices=(small, DEV))          # small listed first
+    apps = [hp_app(name="big", quota=50), hp_app(name="small_q", quota=20)]
+    p = place(node, apps, "quota_aware")
+    assert p[0] == 1                               # 50 only fits on 54 slices
+
+
+def test_affinity_colocates_same_arch():
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(name="a", cfg=OLMO), hp_app(name="b", cfg=WHISPER),
+            hp_app(name="c", cfg=OLMO, rps=5.0)]
+    p = place(node, apps, "affinity")
+    assert p[0] == p[2]                    # both olmo replicas together
+    assert p[0] != p[1]                    # whisper on the other device
+
+
+def test_demand_estimate_bounds():
+    assert demand_estimate(be_train(), DEV) == 1.0
+    d = demand_estimate(hp_app(rps=1.0), DEV)
+    assert 0.0 < d <= 1.0
+
+
+def test_unknown_router_raises():
+    with pytest.raises(ValueError):
+        place(NodeSpec.uniform(2, DEV), [hp_app()], "random")
+
+
+# -- multi-device end-to-end -------------------------------------------------
+
+def test_two_device_node_runs_and_aggregates():
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(name="hpA"), hp_app(name="hpB", cfg=WHISPER, rps=10.0),
+            be_train(name="beA"), be_train(name="beB", cfg=OLMO)]
+    res = evaluate("lithos", node, apps, horizon=2.0, seed=1,
+                   router="least_loaded")
+    assert len(res.clients) == 4
+    assert {c.name for c in res.clients} == {"hpA", "hpB", "beA", "beB"}
+    assert res.client("hpA").n_completed > 0
+    assert 0.0 < res.utilization <= 1.0
+    assert res.energy > 0
+    # per-device records only mention clients placed on that device
+    for d, r in enumerate(res.per_device):
+        cids_here = {i for i, p in enumerate(res.placement) if p == d}
+        assert {rec.task.client_id for rec in r.records} <= cids_here
+    # a tenant keeps its node-global cid and hence its workload stream
+    assert [c.cid for c in res.clients] == [0, 1, 2, 3]
+
+
+def test_client_keeps_workload_stream_across_placements():
+    """Same tenant, different routers -> same arrival process (cids are
+    node-global, so placement never resamples a client's randomness)."""
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(name="hpA"), hp_app(name="hpB", cfg=WHISPER, rps=10.0),
+            be_train(name="beA"), be_train(name="beB", cfg=OLMO)]
+    r1 = evaluate("lithos", node, apps, horizon=1.0, seed=5,
+                  router="round_robin")
+    r2 = evaluate("lithos", node, apps, horizon=1.0, seed=5,
+                  router="affinity")
+    a1 = sorted(r1.client("hpA").arrivals)
+    a2 = sorted(r2.client("hpA").arrivals)
+    # completed-job arrival times come from the same Poisson stream
+    common = min(len(a1), len(a2))
+    assert common > 0 and a1[:common] == a2[:common]
+
+
+def test_mig_on_node_still_strands_be():
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(name="hpA"), hp_app(name="hpB", cfg=WHISPER, rps=10.0),
+            be_train(name="beA"), be_train(name="beB", cfg=OLMO)]
+    res = evaluate("mig", node, apps, horizon=1.0, seed=0)
+    assert res.client("beA").n_completed == 0
+    assert res.client("beB").n_completed == 0
+    assert res.client("hpA").n_completed > 0
+
+
+# -- quota derivation clamp (capacity is a hard ceiling) ---------------------
+
+def test_quotas_clamped_to_device_capacity():
+    apps = [hp_app(name="a", quota=DEV.n_slices + 40),
+            hp_app(name="b"),                      # derived
+            be_train(name="c")]
+    q = quotas_from_apps(DEV, apps)
+    assert sum(x.slices for x in q.values()) <= DEV.n_slices
+    assert q[0].slices == DEV.n_slices             # clamped, not 94
+    assert q[1].slices == 0                        # nothing left to promise
+    assert q[2].slices == 0
+
+
+def test_quotas_derived_split_unchanged_when_capacity_fits():
+    apps = [hp_app(name="a"), hp_app(name="b"), be_train(name="c")]
+    q = quotas_from_apps(DEV, apps)
+    assert q[0].slices == q[1].slices == DEV.n_slices // 2
+    assert sum(x.slices for x in q.values()) <= DEV.n_slices
+
+
+def test_explicit_quota_reserved_before_derived_shares():
+    """An explicit guarantee that fits on its own must not be degraded to
+    cover the >=1-slice floor of derived shares handed out earlier."""
+    apps = [hp_app(name=f"d{i}") for i in range(5)] + \
+           [hp_app(name="explicit", quota=50)]
+    q = quotas_from_apps(DEV, apps)
+    assert q[5].slices == 50                       # reserved first
+    assert sum(x.slices for x in q.values()) <= DEV.n_slices
+    assert all(q[i].slices in (0, 1) for i in range(5))
+
+
+def test_quotas_with_global_cids():
+    apps = [hp_app(name="a"), be_train(name="c")]
+    q = quotas_from_apps(DEV, apps, cids=[7, 42])
+    assert set(q) == {7, 42}
+    assert q[7].priority == Priority.HIGH

@@ -2,7 +2,6 @@
 semantics, work conservation, and qualitative orderings from the paper."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_config
 from repro.core.lithos import evaluate, quotas_from_apps, run_alone

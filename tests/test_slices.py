@@ -1,0 +1,140 @@
+"""SliceMap subsystem: unit semantics + whole-simulation conservation
+invariants (owned + pool + held partitions the device at every event, no
+slice held by two kernels, steal ledger consistent with the paper-facing
+``stolen_slice_seconds`` metric)."""
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.lithos import make_policy
+from repro.core.scheduler import LithOSConfig
+from repro.core.simulator import Simulator
+from repro.core.slices import SliceMap
+from repro.core.types import DeviceSpec, Priority, Quota
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+
+
+def hp_app(rps=20.0, name="hp"):
+    return AppSpec(name, OLMO, "fwd_infer", priority=Priority.HIGH,
+                   rps=rps, prompt_mix=((128, 1.0),), batch=4, fusion=8)
+
+
+def be_train(name="be"):
+    return AppSpec(name, LLAMA, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8)
+
+
+# -- unit semantics ----------------------------------------------------------
+
+def test_from_quotas_layout_and_counts():
+    sm = SliceMap.from_quotas(10, {0: Quota(4, Priority.HIGH),
+                                   1: Quota(3, Priority.BEST_EFFORT)})
+    assert sm.owned_by(0) == 4 and sm.owned_by(1) == 3
+    assert sm.owner[:4] == [0] * 4 and sm.owner[4:7] == [1] * 3
+    assert sm.owner[7:] == [None] * 3
+    assert sm.idle_pool() == [7, 8, 9]
+    c = sm.counts()
+    assert c["owned_idle"] + c["pool_idle"] + c["held"] == 10
+    sm.check()
+
+
+def test_free_for_ordering_own_pool_stolen():
+    sm = SliceMap.from_quotas(8, {0: Quota(3), 1: Quota(3)})
+    # own (0,1,2) then pool (6,7) then lender-1 slices (3,4,5)
+    assert sm.free_for(0, lenders=[1]) == [0, 1, 2, 6, 7, 3, 4, 5]
+    assert sm.free_for(0) == [0, 1, 2, 6, 7]
+
+
+def test_acquire_release_and_double_hold_rejected():
+    sm = SliceMap.from_quotas(6, {0: Quota(3), 1: Quota(3)})
+    stolen = sm.acquire([0, 1], kid=100, borrower=0, now=1.0, eta=0.5)
+    assert not stolen                       # own slices are not steals
+    assert sm.holder[0] == 100 and sm.busy_until[0] == pytest.approx(1.5)
+    assert sm.n_own_idle(0) == 1
+    with pytest.raises(AssertionError):
+        sm.acquire([1], kid=200, borrower=1, now=1.0)
+    sm.check()
+    freed = sm.release(100, now=2.0)
+    assert set(freed) == {0, 1}
+    assert sm.n_own_idle(0) == 3 and sm.holder[0] is None
+    sm.check()
+
+
+def test_steal_ledger_opens_and_closes():
+    sm = SliceMap.from_quotas(6, {0: Quota(3), 1: Quota(3)})
+    stolen = sm.acquire([2, 3], kid=7, borrower=1, now=0.0, eta=1.0)
+    assert stolen                           # slice 2 belongs to client 0
+    assert len(sm.ledger) == 1              # only the cross-owner slice
+    rec = sm.ledger[0]
+    assert (rec.slice_id, rec.owner, rec.borrower, rec.kid) == (2, 0, 1, 7)
+    assert rec.open
+    sm.check()
+    sm.release(7, now=2.5)
+    assert not rec.open and rec.duration == pytest.approx(2.5)
+    assert sm.lent_slice_seconds == pytest.approx(2.5)
+    sm.check()
+
+
+def test_pool_acquisition_is_not_a_steal():
+    sm = SliceMap.from_quotas(4, {0: Quota(2)})
+    assert not sm.acquire([2, 3], kid=1, borrower=0, now=0.0)
+    assert sm.ledger == []
+    sm.check()
+
+
+# -- whole-simulation invariants --------------------------------------------
+
+def _run_checked(system, apps, horizon=2.0, seed=0, lithos_config=None):
+    policy = make_policy(system, DEV, apps, lithos_config=lithos_config)
+    sim = Simulator(DEV, apps, policy, horizon=horizon, seed=seed)
+    orig = sim._apply_allocations
+    n_checks = [0]
+
+    def checked():
+        out = orig()
+        policy.slices.check()
+        c = policy.slices.counts()
+        assert (c["owned_idle"] + c["pool_idle"] + c["held"]
+                == DEV.n_slices)
+        n_checks[0] += 1
+        return out
+
+    sim._apply_allocations = checked
+    res = sim.run()
+    assert n_checks[0] > 0
+    policy.slices.check()
+    return res, policy
+
+
+def test_lithos_conservation_every_event():
+    res, policy = _run_checked("lithos", [hp_app(), be_train()], seed=3)
+    assert res.client("hp").n_completed > 0
+    # steal scenario: BE trainer runs on HP quota -> ledger + metric agree
+    assert policy.slices.lent_slice_seconds > 0
+    assert policy.stolen_slice_seconds > 0
+    assert all(r.t_end is None or r.t_end >= r.t_start
+               for r in policy.slices.ledger)
+
+
+def test_lithos_no_steal_means_empty_ledger():
+    res, policy = _run_checked("lithos", [hp_app(), be_train()], seed=3,
+                               lithos_config=LithOSConfig(steal=False))
+    assert policy.slices.ledger == []
+    assert policy.slices.lent_slice_seconds == 0.0
+    assert policy.stolen_slice_seconds == 0.0
+
+
+def test_mig_conservation_and_no_lending():
+    res, policy = _run_checked("mig", [hp_app(), be_train()], seed=0)
+    assert res.client("hp").n_completed > 0
+    # MIG acquires only from its own partition: structurally no lends
+    assert policy.slices.ledger == []
+
+
+def test_limits_conservation():
+    res, policy = _run_checked("limits", [hp_app(), be_train()], seed=0)
+    assert res.client("hp").n_completed > 0
+    assert policy.slices.ledger == []
