@@ -32,7 +32,7 @@ def run(quick: bool = False):
     ideal = max(run_alone(DEV, hp, horizon=horizon, seed=51).client("hp").p99,
                 1e-9)
     solo_be = run_alone(DEV, be, horizon=horizon, seed=51)
-    be_alone = max(frac_throughput(solo_be, be, "be", horizon), 1e-9)
+    be_alone = max(frac_throughput(solo_be, "be", horizon), 1e-9)
     for name, cfgv in VARIANTS.items():
         system = "mps" if cfgv is None else "lithos"
         res = evaluate(system, DEV, [hp, be], horizon=horizon, seed=51,
@@ -43,7 +43,7 @@ def run(quick: bool = False):
         rows.append(fmt_csv("fig19", name, "hp_throughput_vs_load",
                             f"{H.throughput/max(hp.rps,1e-9):.2f}", "x"))
         rows.append(fmt_csv("fig19", name, "be_throughput_vs_alone",
-                            f"{frac_throughput(res, be, 'be', horizon)/be_alone:.2f}",
+                            f"{frac_throughput(res, 'be', horizon)/be_alone:.2f}",
                             "x"))
     for r in rows:
         print(r)

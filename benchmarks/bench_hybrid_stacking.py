@@ -42,14 +42,14 @@ def run(quick: bool = False):
         solo_hp = run_alone(DEV, hpa, horizon=horizon, seed=21)
         solo_be = run_alone(DEV, bee, horizon=horizon, seed=21)
         p99_ideal = max(solo_hp.client("hp").p99, 1e-9)
-        thr_be_alone = max(frac_throughput(solo_be, bee, "be", horizon), 1e-9)
+        thr_be_alone = max(frac_throughput(solo_be, "be", horizon), 1e-9)
         for system in SYSTEMS:
             res = evaluate(system, DEV, [hpa, bee], horizon=horizon, seed=21)
             H, E = res.client("hp"), res.client("be")
             agg[system].append(dict(
                 p99_norm=H.p99 / p99_ideal,
                 hp_thr=H.throughput / max(hpa.rps, 1e-9),
-                be_thr=frac_throughput(res, bee, "be", horizon)
+                be_thr=frac_throughput(res, "be", horizon)
                 / thr_be_alone,
                 combo=f"{hp_name}+{be_name}"))
     for system in SYSTEMS:

@@ -67,22 +67,22 @@ def run(quick: bool = False):
         solo_b = run_alone(DEV, hpb, horizon=horizon, seed=11)
         solo_be = run_alone(DEV, be, horizon=horizon, seed=11)
         thr_a_alone = max(solo_a.client("hpA").throughput, 1e-9)
-        thr_b_alone = max(frac_throughput(solo_b, hpb, "hpB", horizon), 1e-9)
-        thr_be_alone = max(frac_throughput(solo_be, be, "be", horizon), 1e-9)
+        thr_b_alone = max(frac_throughput(solo_b, "hpB", horizon), 1e-9)
+        thr_be_alone = max(frac_throughput(solo_be, "be", horizon), 1e-9)
         for system in SYSTEMS:
             res = evaluate(system, DEV, [hpa, hpb, be, be2],
                            horizon=horizon, seed=11)
             A, B = res.client("hpA"), res.client("hpB")
             slo_a = A.slo_attainment(hpa.slo_latency)
-            slo_b = (frac_throughput(res, hpb, "hpB", horizon) /
+            slo_b = (frac_throughput(res, "hpB", horizon) /
                      thr_b_alone)
             thr = ((A.throughput / thr_a_alone) +
-                   frac_throughput(res, hpb, "hpB", horizon)
+                   frac_throughput(res, "hpB", horizon)
                    / thr_b_alone) / 2.0
             goodput_a = A.goodput(hpa.slo_latency, horizon) / max(
                 hpa.rps, 1e-9)
-            be_thr = (frac_throughput(res, be, "be", horizon)
-                      + frac_throughput(res, be2, "be2", horizon)
+            be_thr = (frac_throughput(res, "be", horizon)
+                      + frac_throughput(res, "be2", horizon)
                       ) / thr_be_alone
             p99 = A.p99
             agg[system].append(dict(slo_a=slo_a, slo_b=min(slo_b, 1.5),

@@ -59,7 +59,7 @@ def run_node(node: NodeSpec, apps, horizon: float, seed: int,
                                         f"{app.name}_slo",
                                         f"{slo * 100:.1f}", "%"))
                 else:
-                    thr = frac_throughput(res, app, app.name, horizon)
+                    thr = frac_throughput(res, app.name, horizon)
                     be_thr.append(thr)
                     rows.append(fmt_csv(tag, router, system,
                                         f"{app.name}_throughput",

@@ -1,0 +1,124 @@
+"""Cross-device TPC stealing: node-level lending vs static placement.
+
+Quantifies the NodeCoordinator's stolen-capacity throughput gain on the
+ROADMAP's router-quality adversarial mixes — placements a static router gets
+wrong because load materialized after the placement decision:
+
+  * ``idle_saturated``  — every tenant pinned on device 0, device 1 idle
+    (burst arrival at one service / stale forecast).  The canonical
+    saturated-D' + idle-D shape of §4.3 scaled across devices.
+  * ``skewed``          — heavy HP + two BE trainers on device 0, one light
+    HP service on device 1 (imbalanced but not empty: stealing must not
+    regress the light service's SLO).
+
+For each mix it runs lithos with ``migration=off`` (static baseline) and
+with the lending protocol on, and reports per-tenant HP P99/SLO attainment,
+BE fractional throughput, node utilization, migration count and donated
+device-seconds.  Headline: >= 1.2x aggregate BE throughput on the
+idle+saturated mix with zero HP SLO regressions.
+
+    PYTHONPATH=src python benchmarks/bench_node_stealing.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+from benchmarks.scenarios import (DEV, be_trainers, calibrated, fmt_csv,
+                                  frac_throughput, hp_services)
+from dataclasses import replace
+
+from repro.core.lithos import evaluate
+from repro.core.types import NodeConfig, NodeSpec, Priority
+
+STEAL = NodeConfig(migration=True, epoch=0.25, migration_cost=0.05,
+                   cooldown=2.0, free_hi=0.5, free_lo=0.2, hp_depth_hi=3)
+STATIC = NodeConfig(migration=False)
+
+
+def mixes():
+    hp = hp_services()
+    be = be_trainers()
+    hp0 = calibrated(replace(hp["resnet"], name="hp0"), 0.5, device=DEV,
+                     slo_mult=4.0)
+    hp1 = calibrated(replace(hp["bert"], name="hp1"), 0.15, device=DEV,
+                     slo_mult=4.0)
+    be0 = replace(be["olmo_train"], name="be0", train_batch=2, train_seq=512)
+    be1 = replace(be0, name="be1")
+    return {
+        # everything lands on device 0; device 1 has no tenants at all
+        "idle_saturated": ([hp0, be0, be1], [0, 0, 0]),
+        # device 1 hosts a light HP service: a lender, but with an SLO to keep
+        "skewed": ([hp0, be0, be1, hp1], [0, 0, 0, 1]),
+    }
+
+
+def run_mix(tag, apps, placement, node, horizon, seed, rows):
+    out = {}
+    for mode, cfg in (("static", STATIC), ("stealing", STEAL)):
+        res = evaluate("lithos", node, apps, horizon=horizon, seed=seed,
+                       placement=placement, node_config=cfg)
+        hp_slo, be_thr = [], 0.0
+        for app in apps:
+            cm = res.client(app.name)
+            if app.priority == Priority.HIGH:
+                slo = cm.slo_attainment(app.slo_latency)
+                hp_slo.append((app.name, slo))
+                rows.append(fmt_csv(tag, mode, f"{app.name}_p99",
+                                    f"{cm.p99 * 1e3:.2f}", "ms"))
+                rows.append(fmt_csv(tag, mode, f"{app.name}_slo",
+                                    f"{slo * 100:.1f}", "%"))
+            else:
+                thr = frac_throughput(res, app.name, horizon)
+                be_thr += thr
+                rows.append(fmt_csv(tag, mode, f"{app.name}_throughput",
+                                    f"{thr:.3f}", "jobs/s"))
+        rows.append(fmt_csv(tag, mode, "agg_be_throughput",
+                            f"{be_thr:.3f}", "jobs/s"))
+        rows.append(fmt_csv(tag, mode, "node_utilization",
+                            f"{res.utilization * 100:.1f}", "%"))
+        rows.append(fmt_csv(tag, mode, "migrations", res.migrations, "n"))
+        if res.ledger is not None:
+            rows.append(fmt_csv(tag, mode, "donated_device_seconds",
+                                f"{res.ledger.donated_seconds(horizon):.2f}",
+                                "s"))
+        out[mode] = (be_thr, dict(hp_slo))
+    gain = out["stealing"][0] / max(out["static"][0], 1e-9)
+    rows.append(fmt_csv(tag, "-", "be_throughput_gain", f"{gain:.2f}", "x"))
+    regressed = [n for n, s in out["stealing"][1].items()
+                 if s < out["static"][1][n] - 1e-9]
+    rows.append(fmt_csv(tag, "-", "hp_slo_regressions",
+                        "|".join(regressed) or "none", ""))
+    return gain, regressed
+
+
+def run(quick: bool = False):
+    rows = [fmt_csv("mix", "mode", "metric", "value", "unit")]
+    horizon = 3.0 if quick else 10.0
+    node = NodeSpec.uniform(2, DEV)
+    failures = []
+    for tag, (apps, placement) in mixes().items():
+        gain, regressed = run_mix(tag, apps, placement, node, horizon, 17,
+                                  rows)
+        if tag == "idle_saturated" and gain < 1.2:
+            failures.append(f"{tag}: BE gain {gain:.2f}x < 1.2x")
+        if regressed:
+            failures.append(f"{tag}: HP SLO regressed for {regressed}")
+    for r in rows:
+        print(r)
+    if failures:
+        raise RuntimeError("; ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="short horizons")
+    args = ap.parse_args()
+    run(quick=args.smoke)

@@ -24,6 +24,7 @@ MODULES = [
     ("sec7.4_predictor", "benchmarks.bench_predictor"),
     ("pallas_atoms", "benchmarks.bench_pallas_atoms"),
     ("node_stacking", "benchmarks.bench_node_stacking"),
+    ("node_stealing", "benchmarks.bench_node_stealing"),
 ]
 
 

@@ -146,15 +146,19 @@ def calibrated_solo_run(app: AppSpec, lithos_config, *, horizon: float,
     return res
 
 
-def frac_throughput(res, app: AppSpec, cid_name: str, horizon: float) -> float:
+def frac_throughput(res, cid_name: str, horizon: float) -> float:
     """Jobs/s including fractional progress (kernel completions / kernels
     per job) — closed-loop BE trainers complete few whole steps in short
-    sim horizons, so whole-job counting quantizes harshly."""
-    import numpy as np
-    rng = np.random.default_rng((0, app.seed, 0))
-    per_job = max(1, len(app.job_trace(rng)))
+    sim horizons, so whole-job counting quantizes harshly.
+
+    Kernels-per-job comes from the simulated client's *own* issued jobs
+    (``ClientMetrics.kernels_per_job``), never from resampling the trace:
+    a fresh RNG stream is exact only for deterministic train traces and
+    biased for stochastic LLM traces (geometric decode lengths)."""
     # client ids are node-global and need not equal list position
-    cid = next(c.cid for c in res.clients if c.name == cid_name)
+    cm = next(c for c in res.clients if c.name == cid_name)
+    per_job = max(1.0, cm.kernels_per_job)
+    cid = cm.cid
     kernels = sum(1 for r in res.records
                   if r.task.client_id == cid and r.task.atom_of is None)
     atoms = {}

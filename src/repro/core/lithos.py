@@ -13,7 +13,8 @@ from typing import Optional
 from repro.core import baselines
 from repro.core.scheduler import LithOSConfig, LithOSScheduler
 from repro.core.simulator import Policy, SimResult, Simulator
-from repro.core.types import DeviceSpec, NodeSpec, Priority, Quota
+from repro.core.types import (DeviceSpec, NodeConfig, NodeSpec, Priority,
+                              Quota)
 from repro.core.workloads import AppSpec
 
 SYSTEMS = ("lithos", "mps", "mig", "limits", "timeslice", "priority",
@@ -104,19 +105,27 @@ def make_policy(system: str, device: DeviceSpec, apps: list[AppSpec], *,
 def evaluate(system: str, device, apps: list[AppSpec], *,
              horizon: float = 30.0, seed: int = 0,
              lithos_config: Optional[LithOSConfig] = None,
-             router: str = "least_loaded"):
+             router: str = "least_loaded",
+             node_config: Optional[NodeConfig] = None,
+             placement: Optional[list] = None):
     """Run one system over one workload mix.
 
     ``device`` may be a :class:`DeviceSpec` (single-device path, returns a
     :class:`SimResult`) or a :class:`NodeSpec` (multi-device path: the node
     layer routes tenants across devices with ``router`` and returns a
     ``NodeResult``; a 1-device node reproduces the DeviceSpec path
-    bit-for-bit)."""
+    bit-for-bit).  ``node_config`` tunes the node-level lending protocol
+    (cross-device TPC stealing); ``placement`` pins tenants to devices,
+    bypassing the router."""
     if isinstance(device, NodeSpec):
         from repro.core.node import evaluate_node
         return evaluate_node(system, device, apps, horizon=horizon,
                              seed=seed, lithos_config=lithos_config,
-                             router=router)
+                             router=router, node_config=node_config,
+                             placement=placement)
+    if node_config is not None or placement is not None:
+        raise ValueError("node_config/placement require a NodeSpec — a bare "
+                         "DeviceSpec has no node layer to apply them to")
     policy = make_policy(system, device, apps, lithos_config=lithos_config)
     sim = Simulator(device, apps, policy, horizon=horizon, seed=seed)
     res = sim.run()

@@ -27,11 +27,27 @@ Router policies:
 Client ids are node-global (the original app order), so a tenant keeps the
 same workload random stream under every placement — router comparisons see
 identical arrivals, not resampled ones.
+
+Cross-device TPC stealing (the node-level lending protocol) lives in
+:class:`NodeCoordinator`: the per-device simulators run as interleaved event
+streams in global time order, per-device pressure is sampled at a fixed
+epoch, and an idle device lends its capacity to a saturated one by hosting a
+best-effort tenant's launch queue (drained at a kernel boundary, charged a
+migration cost, predictor warmed from the source device's observations).
+Every donation is recorded in a :class:`~repro.core.slices.NodeLedger`
+mirroring the SliceMap lend ledger, so conservation invariants extend across
+devices.  With ``NodeConfig.migration=False`` (default) the coordinator
+never intervenes and the run is bit-for-bit the historical independent
+per-device evaluation.
 """
 from __future__ import annotations
 
-from repro.core.simulator import SimResult, Simulator
-from repro.core.types import NodeSpec, Priority
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.simulator import Policy, SimResult, Simulator
+from repro.core.slices import NodeLedger
+from repro.core.types import NodeConfig, NodeSpec, Priority
 from repro.core.workloads import AppSpec, mean_demand
 
 ROUTERS = ("round_robin", "least_loaded", "quota_aware", "affinity")
@@ -150,6 +166,228 @@ def place(node: NodeSpec, apps: list[AppSpec],
     raise AssertionError(f"unhandled router {router!r}")  # ROUTERS is closed
 
 
+@dataclass
+class _Pressure:
+    """One device's pressure sample (the lending protocol's signal)."""
+
+    hp_depth: int                   # HP jobs pending or in progress
+    free_frac: float                # SliceMap free-list occupancy
+    active: int                     # clients with work
+
+
+@dataclass
+class _PendingMigration:
+    cid: int
+    src: int
+    dst: int
+    t_decided: float
+
+
+class NodeCoordinator:
+    """Runs the per-device simulators as interleaved event streams and
+    drives the node-level lending protocol (cross-device TPC stealing).
+
+    The loop always steps the simulator with the globally earliest pending
+    event, so device clocks stay within one event of each other — the
+    precondition for sampling a coherent node-wide pressure snapshot every
+    ``config.epoch`` seconds and for moving a launch queue between devices
+    without time travel.
+
+    Migration of a chosen best-effort client proceeds in three phases:
+
+    1. **hold** — the source policy stops planning new kernels for the
+       client; its in-flight kernel drains at the atom boundary;
+    2. **detach / export** — once drained (observed after a source event),
+       the client object moves with its launch queue, pending jobs and RNG
+       stream intact; the source policy exports its predictor observations;
+    3. **admit / warm** — the target admits the client immediately (so it is
+       never unaccounted for), imports the warm predictor state, and holds
+       dispatch for ``migration_cost`` seconds — the price of moving a
+       replica's working state between devices.
+
+    Every move is recorded in a :class:`NodeLedger`; ``config.validate``
+    additionally re-checks cross-device conservation at every epoch.
+    """
+
+    def __init__(self, node: NodeSpec, placement: list[int],
+                 sims: list[Simulator], policies: list[Policy],
+                 config: Optional[NodeConfig] = None):
+        self.node = node
+        self.placement = placement
+        self.sims = sims
+        self.policies = policies
+        self.config = config or NodeConfig()
+        self.ledger = NodeLedger(node.n_devices, placement)
+        self._pending: Optional[_PendingMigration] = None
+        self._last_move: dict[int, float] = {}
+        self.migration_log: list[tuple[float, int, int, int]] = []
+
+    # -- pressure sampling ---------------------------------------------------
+
+    def _pressure(self, d: int) -> _Pressure:
+        sim = self.sims[d]
+        hp_depth = 0
+        active = 0
+        for c in sim.clients:
+            busy = (c.current is not None or bool(c.pending)
+                    or c.outstanding > 0)
+            if busy or c.closed_loop:
+                active += 1
+            if c.priority == Priority.HIGH:
+                hp_depth += len(c.pending) + (1 if c.current is not None
+                                              else 0)
+        sm = getattr(self.policies[d], "slices", None)
+        if sm is not None:
+            cnt = sm.counts()
+            free = cnt["owned_idle"] + cnt["pool_idle"]
+        else:
+            free = sim.free_slices()
+        return _Pressure(hp_depth, free / sim.device.n_slices, active)
+
+    def _saturated(self, p: _Pressure) -> bool:
+        cfg = self.config
+        return (p.hp_depth >= cfg.hp_depth_hi
+                or (p.free_frac <= cfg.free_lo and p.active >= 2))
+
+    def _lender(self, p: _Pressure) -> bool:
+        cfg = self.config
+        return p.hp_depth == 0 and p.free_frac >= cfg.free_hi
+
+    # -- migration decisions -------------------------------------------------
+
+    def _candidates(self, d: int, now: float) -> list[int]:
+        """BE clients on device ``d`` eligible to move: have work, not in a
+        cooldown window, and own no slices — ownership is static for a
+        simulation, so a BE tenant with an *explicit* quota (legitimately
+        granted by ``quotas_from_apps``) is pinned like an HP tenant.
+        Ascending cid — deterministic."""
+        sm = getattr(self.policies[d], "slices", None)
+        out = []
+        for c in self.sims[d].clients:
+            if c.priority == Priority.HIGH:
+                continue
+            if sm is not None and sm.owned_by(c.cid) > 0:
+                continue
+            if not (c.closed_loop or c.current is not None or c.pending):
+                continue
+            if now < self._last_move.get(c.cid, -1e18) + self.config.cooldown:
+                continue
+            out.append(c.cid)
+        return sorted(out)
+
+    def _epoch(self, now: float):
+        cfg = self.config
+        if cfg.validate:
+            self.check()
+        if self._pending is not None:
+            return                          # one drain in progress at a time
+        if cfg.max_migrations and \
+                self.ledger.n_migrations >= cfg.max_migrations:
+            return
+        if not all(p.supports_migration for p in self.policies):
+            return
+        press = [self._pressure(d) for d in range(self.node.n_devices)]
+        lenders = [d for d in range(self.node.n_devices)
+                   if self._lender(press[d])]
+        if not lenders:
+            return
+        # most-pressured saturated device with an eligible BE tenant first
+        sat = sorted((d for d in range(self.node.n_devices)
+                      if self._saturated(press[d])),
+                     key=lambda d: (-press[d].hp_depth, press[d].free_frac,
+                                    d))
+        for src in sat:
+            cands = self._candidates(src, now)
+            if not cands:
+                continue
+            dst = max((d for d in lenders if d != src),
+                      key=lambda d: (press[d].free_frac, -d), default=None)
+            if dst is None:
+                continue
+            cid = cands[0]
+            self._pending = _PendingMigration(cid, src, dst, now)
+            self.policies[src].hold_client(cid)   # begin draining
+            self._maybe_execute(src)              # may already be drained
+            return
+
+    def _maybe_execute(self, d: int):
+        """Execute the pending migration once its client has drained (called
+        after every event on the source device)."""
+        pm = self._pending
+        if pm is None or pm.src != d:
+            return
+        src_sim, dst_sim = self.sims[pm.src], self.sims[pm.dst]
+        if src_sim.done:                        # horizon beat the drain
+            self.policies[pm.src].release_hold(pm.cid)
+            self._pending = None
+            return
+        if not self.policies[pm.src].client_drained(pm.cid):
+            return
+        # The migration is anchored at the *decision-or-later* instant: a
+        # saturated device's clock (its last processed event) can lag the
+        # epoch that decided the move, and stamping the ledger / cooldown /
+        # cost with the stale clock would erode the cooldown window and
+        # over-count donated seconds.  The arrival cutoff, by contrast, is
+        # exactly what the source actually processed (its own clock).
+        t_mig = max(src_sim.now, pm.t_decided)
+        state = self.policies[pm.src].export_client_state(pm.cid)
+        client = src_sim.detach_client(pm.cid)
+        self.policies[pm.dst].import_client_state(pm.cid, client.priority,
+                                                  state)
+        dst_sim.admit_client(client, after=src_sim.now)
+        self.policies[pm.dst].hold_client(pm.cid)
+        dst_sim.schedule_release(pm.cid, t_mig + self.config.migration_cost)
+        self.ledger.migrate(pm.cid, pm.dst, t_mig)
+        self._last_move[pm.cid] = t_mig
+        self.migration_log.append((t_mig, pm.cid, pm.src, pm.dst))
+        self._pending = None
+
+    # -- invariants ----------------------------------------------------------
+
+    def check(self) -> bool:
+        """Cross-device conservation: every client hosted exactly once, the
+        ledger agrees with the live hosting map, and each device's SliceMap
+        invariants hold."""
+        hosted: dict[int, int] = {}
+        for d, sim in enumerate(self.sims):
+            for c in sim.clients:
+                assert c.cid not in hosted, f"client {c.cid} hosted twice"
+                hosted[c.cid] = d
+        self.ledger.check(hosted)
+        for p in self.policies:
+            sm = getattr(p, "slices", None)
+            if sm is not None:
+                sm.check()
+        return True
+
+    # -- interleaved run loop ------------------------------------------------
+
+    def run(self) -> list[SimResult]:
+        cfg = self.config
+        for sim in self.sims:
+            sim.start()
+        migrate = cfg.migration and self.node.n_devices > 1
+        next_epoch = cfg.epoch if migrate else float("inf")
+        horizon = self.sims[0].horizon
+        active = set(range(len(self.sims)))
+        while active:
+            d = min((i for i in active if self.sims[i].peek_time() is not None),
+                    key=lambda i: (self.sims[i].peek_time(), i), default=None)
+            if d is None:
+                break
+            t = self.sims[d].peek_time()
+            while migrate and t >= next_epoch and next_epoch <= horizon:
+                self._epoch(next_epoch)
+                next_epoch += cfg.epoch
+            if not self.sims[d].step_event():
+                active.discard(d)
+            if migrate:
+                self._maybe_execute(d)
+        if cfg.validate:
+            self.check()
+        return [SimResult(sim) for sim in self.sims]
+
+
 class NodeResult:
     """Aggregated result of one node run: per-device :class:`SimResult`s
     plus node-level metrics with the same read surface as a SimResult
@@ -157,13 +395,20 @@ class NodeResult:
     ``records``)."""
 
     def __init__(self, node: NodeSpec, router: str, placement: list[int],
-                 results: list[SimResult], policies: list):
+                 results: list[SimResult], policies: list,
+                 coordinator: Optional[NodeCoordinator] = None):
         self.node = node
         self.router = router
         self.placement = placement
         self.per_device = results
         self.policies = policies
         self.policy = policies[0] if policies else None
+        self.coordinator = coordinator
+        self.ledger = coordinator.ledger if coordinator else None
+        self.migrations = self.ledger.n_migrations if self.ledger else 0
+        self.final_placement = (
+            [self.ledger.current[cid] for cid in sorted(self.ledger.current)]
+            if self.ledger else list(placement))
         self.horizon = results[0].horizon
         self.policy_name = results[0].policy_name
         self.energy = sum(r.energy for r in results)
@@ -181,22 +426,34 @@ class NodeResult:
         return next(c for c in self.clients if c.name == name)
 
     def device_of(self, name: str) -> int:
-        """Device index a named client was placed on."""
+        """Device index a named client was *initially* placed on (see
+        ``final_placement`` for where migration left it)."""
         cid = self.client(name).cid
         return self.placement[cid]
 
 
 def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
                   horizon: float = 30.0, seed: int = 0,
-                  lithos_config=None, router: str = "least_loaded"
-                  ) -> NodeResult:
-    """Route ``apps`` across the node, run one simulator + policy instance
-    per device, aggregate.  Devices are independent under static placement,
-    so per-device runs share nothing but the seed."""
+                  lithos_config=None, router: str = "least_loaded",
+                  node_config: Optional[NodeConfig] = None,
+                  placement: Optional[list[int]] = None) -> NodeResult:
+    """Route ``apps`` across the node and run one simulator + policy
+    instance per device as interleaved event streams under a
+    :class:`NodeCoordinator`.  With migration disabled (the default
+    ``node_config``) devices share nothing, so the interleaved run is
+    exactly the historical independent per-device evaluation; with
+    ``node_config.migration=True`` the coordinator lends idle devices'
+    capacity to saturated ones by migrating best-effort launch queues.
+
+    ``placement`` overrides the router's decision (benchmarks pin
+    adversarial placements with it)."""
     from repro.core.lithos import make_policy
 
-    placement = place(node, apps, router)
-    results: list[SimResult] = []
+    if placement is None:
+        placement = place(node, apps, router)
+    assert len(placement) == len(apps) and \
+        all(0 <= d < node.n_devices for d in placement)
+    sims: list[Simulator] = []
     policies = []
     for d, dev in enumerate(node.devices):
         idx = [i for i, p in enumerate(placement) if p == d]
@@ -205,6 +462,10 @@ def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
                              lithos_config=lithos_config, cids=idx)
         sim = Simulator(dev, dev_apps, policy, horizon=horizon, seed=seed,
                         cids=idx)
-        results.append(sim.run())
+        sims.append(sim)
         policies.append(policy)
-    return NodeResult(node, router, placement, results, policies)
+    coord = NodeCoordinator(node, list(placement), sims, policies,
+                            config=node_config)
+    results = coord.run()
+    return NodeResult(node, router, list(placement), results, policies,
+                      coordinator=coord)

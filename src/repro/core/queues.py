@@ -76,6 +76,7 @@ class Client:
         self.outstanding = 0                         # dispatched, incomplete
         self.completed: list[Job] = []
         self.jobs_issued = 0
+        self.job_kernel_counts: list[int] = []   # kernels per issued job
         self.slice_seconds = 0.0
         self._arrivals = spec.arrivals(horizon, self.rng)
 
@@ -99,8 +100,12 @@ class Client:
             marks = [i for i, op in enumerate(ops)
                      if i > 0 and op.name.startswith("embed")]
         self.jobs_issued += 1
-        return Job(_build_batches(ops, self.cid, self.cid, marks),
-                   arrival, jid=self.jobs_issued)
+        job = Job(_build_batches(ops, self.cid, self.cid, marks),
+                  arrival, jid=self.jobs_issued)
+        # record the *actual* kernels of each issued job: fractional-progress
+        # metrics must divide by the sim's own traces, not resample them
+        self.job_kernel_counts.append(job.n_kernels())
+        return job
 
     # -- queue state ------------------------------------------------------------
 

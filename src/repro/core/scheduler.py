@@ -68,6 +68,7 @@ class _QueueState:
 
 class LithOSScheduler(Policy):
     name = "lithos"
+    supports_migration = True
 
     def __init__(self, device: DeviceSpec, quotas: dict[int, Quota],
                  config: Optional[LithOSConfig] = None):
@@ -85,6 +86,10 @@ class LithOSScheduler(Policy):
         self.qstate: dict[int, _QueueState] = {}
         self.pred_log: list[tuple[float, float, int]] = []  # (pred, act, prio)
         self._grown: dict[int, int] = {}
+        # draining / paying migration cost.  Counted, not boolean: a stale
+        # scheduled unhold (e.g. the migration-cost release of an earlier
+        # move) must not cancel a newer drain-hold on the same client.
+        self._held: dict[int, int] = {}
 
     @property
     def stolen_slice_seconds(self) -> float:
@@ -211,6 +216,10 @@ class LithOSScheduler(Policy):
         for c in order:
             qs = self._qs(c.cid)
             if qs.parent is None:
+                # held clients drain at the current kernel boundary: the
+                # in-flight kernel's atoms finish, nothing new is planned
+                if c.cid in self._held:
+                    continue
                 task = c.peek()
                 if task is not None:
                     c.pop()
@@ -264,4 +273,46 @@ class LithOSScheduler(Policy):
         if not qs.atoms and qs.in_flight_kid is None:
             qs.parent = None
             ek.client.kernel_done(now)
+
+    # -- cross-device migration protocol (node-level lending, §4.3 scaled
+    # -- out: the NodeCoordinator drives hold -> drain -> export / import) --
+
+    def hold_client(self, cid: int):
+        self._held[cid] = self._held.get(cid, 0) + 1
+
+    def release_hold(self, cid: int):
+        n = self._held.get(cid, 0) - 1      # stale release: no-op
+        if n > 0:
+            self._held[cid] = n
+        else:
+            self._held.pop(cid, None)
+
+    def client_drained(self, cid: int) -> bool:
+        c = self.sim.client_by_id.get(cid)
+        qs = self.qstate.get(cid)
+        return (c is not None and c.outstanding == 0
+                and (qs is None or (qs.parent is None and not qs.atoms
+                                    and qs.in_flight_kid is None)))
+
+    def export_client_state(self, cid: int) -> dict:
+        """Drop a drained client from this device's control plane and hand
+        its learned predictor state to the target (the queue keeps its
+        node-global id, so (queue, ordinal) keys stay valid there)."""
+        assert self.client_drained(cid), "export requires a drained client"
+        self.qstate.pop(cid, None)
+        self._held.pop(cid, None)       # all holds die with the residency
+        quota = self.quotas.pop(cid, Quota(0))
+        assert self.slices.owned_by(cid) == 0, \
+            "only quota-less (BE) clients migrate; slice ownership is static"
+        keys = [k for k in self.predictor.nodes if k[0] == cid]
+        nodes = {k: self.predictor.nodes.pop(k) for k in keys}
+        return {"quota": quota, "predictor_nodes": nodes}
+
+    def import_client_state(self, cid: int, priority, state: dict):
+        """Admit a migrated client: BE quota (it runs on stolen capacity)
+        plus the source predictor's observations, so the first kernels on
+        the new device dispatch with warm latency estimates."""
+        self.quotas[cid] = state.get("quota") or Quota(0, priority)
+        for k, v in state.get("predictor_nodes", {}).items():
+            self.predictor.nodes[k] = v
 

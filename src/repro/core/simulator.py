@@ -85,6 +85,10 @@ class Policy:
     # stacking the paper's §2.2 describes).  Spatially isolating policies
     # (LithOS, MIG) keep 0; MPS/Priority/TGS pay it.
     interference_penalty: float = 0.0
+    # Cross-device migration protocol (node-level lending).  A policy that
+    # opts in implements hold/drain/export/import below; the coordinator
+    # never migrates between policies that do not.
+    supports_migration: bool = False
 
     def attach(self, sim: "Simulator"):
         self.sim = sim
@@ -103,6 +107,29 @@ class Policy:
 
     def on_tick(self, now: float):
         pass
+
+    # -- migration protocol (node-level lending; no-ops by default) ---------
+
+    def hold_client(self, cid: int):
+        """Stop planning new kernels for ``cid`` (drain toward a kernel
+        boundary).  In-flight work still completes."""
+
+    def release_hold(self, cid: int):
+        """Resume dispatching for ``cid`` (migration landed or aborted)."""
+
+    def client_drained(self, cid: int) -> bool:
+        """True when ``cid`` sits at a kernel boundary: nothing in flight
+        and nothing planned — safe to move its launch queue."""
+        c = self.sim.client_by_id.get(cid)
+        return c is not None and c.outstanding == 0
+
+    def export_client_state(self, cid: int) -> dict:
+        """Forget a migrating client; return warm state for the target
+        policy (predictor observations etc.)."""
+        return {}
+
+    def import_client_state(self, cid: int, priority, state: dict):
+        """Admit a migrated client, warming from the source's state."""
 
 
 class Simulator:
@@ -125,6 +152,10 @@ class Simulator:
         self.energy = 0.0
         self.busy_slice_seconds = 0.0
         self.records: list[CompletionRecord] = []
+        self.done = False
+        # arrival-stream generation per client: bumped on detach so stale
+        # arrival events left in the heap are ignored if the client returns
+        self._arr_gen: dict[int, int] = {}
         if cids is None:
             cids = list(range(len(apps)))
         assert len(cids) == len(apps) and len(set(cids)) == len(cids)
@@ -236,55 +267,113 @@ class Simulator:
         self.records.append(rec)
         self.policy.on_complete(ek, rec)
 
+    # -- client migration (node-level lending protocol) --------------------------
+
+    def detach_client(self, cid: int) -> "Client":
+        """Remove a *drained* client so its launch queue can move to another
+        device.  Future arrival events it left in the heap are invalidated
+        via the per-client arrival generation."""
+        c = self.client_by_id.pop(cid)
+        assert c.outstanding == 0, "detach requires a drained launch queue"
+        self.clients.remove(c)
+        self._arr_gen[cid] = self._arr_gen.get(cid, 0) + 1
+        return c
+
+    def admit_client(self, client: "Client", after: float):
+        """Add a migrated-in client immediately (it appears in this
+        simulator's result even if the horizon ends before it runs).  The
+        caller gates dispatch via the policy's hold until the migration
+        cost has been paid (:meth:`schedule_release`).
+
+        ``after`` is the migration instant on the *source* clock: arrivals
+        at or before it already fired there (their jobs travel in the
+        client's pending queue), so only strictly later ones are re-seeded
+        here — this simulator's own clock may still lag behind."""
+        assert client.cid not in self.client_by_id
+        self.clients.append(client)
+        self.client_by_id[client.cid] = client
+        gen = self._arr_gen.get(client.cid, 0)
+        for t in client.arrivals():          # open-loop: future arrivals
+            if t > after:
+                self._push(t, "arrival", (client.cid, gen))
+
+    def schedule_release(self, cid: int, at: float):
+        """Schedule the end of a migrated client's hold (migration cost)."""
+        self._push(max(at, self.now), "unhold", cid)
+
     # -- main loop ------------------------------------------------------------------
 
-    def run(self) -> "SimResult":
+    def start(self):
+        """Seed the event heap; call once before stepping."""
         for c in self.clients:
             for t in c.arrivals():
-                self._push(t, "arrival", c.cid)
+                self._push(t, "arrival", (c.cid, 0))
             if c.closed_loop:
-                self._push(0.0, "arrival", c.cid)
+                self._push(0.0, "arrival", (c.cid, 0))
         if self.policy.tick_interval > 0:
             self._push(self.policy.tick_interval, "tick", None)
         self._push(self.horizon, "end", None)
 
-        while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
-            if t > self.horizon and kind != "end":
-                continue
-            self._advance(t)
-            if kind == "end":
-                break
-            if kind == "arrival":
-                c = self.client_by_id[payload]
-                if c.spec.kind != "train":
-                    c.pending.append(c.make_job(self.now))
-                c.start_next_job(self.now)
-            elif kind == "complete":
-                kid, gen = payload
-                ek = self.in_flight.get(kid)
-                if ek is None or ek.gen != gen:
-                    continue
-                if ek.overhead_left > 1e-12 or ek.div_left > 1e-9:
-                    self._schedule_completion(ek)   # stale estimate; refresh
-                    continue
-                self._complete(ek)
-            elif kind == "fswitch":
-                self.freq = payload
-                self._pending_freq = None
-                for ek in self.in_flight.values():
-                    self._schedule_completion(ek)
-            elif kind == "tick":
-                self.policy.on_tick(self.now)
-                self._push(self.now + self.policy.tick_interval, "tick", None)
-            # policy reacts to the new state (apply first so context
-            # switches / grows take effect before dispatch decisions)
-            self._apply_allocations()
-            self.policy.step(self.now)
-            for c in self.clients:
-                c.start_next_job(self.now)
-            self.policy.step(self.now)
-            self._apply_allocations()
+    def peek_time(self) -> Optional[float]:
+        """Timestamp of the next pending event (None when finished)."""
+        if self.done or not self._heap:
+            return None
+        return self._heap[0][0]
+
+    def step_event(self) -> bool:
+        """Process exactly one event (one iteration of the historical run
+        loop).  Returns False once the run is over."""
+        if self.done or not self._heap:
+            self.done = True
+            return False
+        t, _, kind, payload = heapq.heappop(self._heap)
+        if t > self.horizon and kind != "end":
+            return True                     # post-horizon stragglers: skip
+        self._advance(t)
+        if kind == "end":
+            self.done = True
+            return False
+        if kind == "arrival":
+            cid, gen = payload
+            c = self.client_by_id.get(cid)
+            if c is None or gen != self._arr_gen.get(cid, 0):
+                return True                 # migrated away: stale arrival
+            if c.spec.kind != "train":
+                c.pending.append(c.make_job(self.now))
+            c.start_next_job(self.now)
+        elif kind == "complete":
+            kid, gen = payload
+            ek = self.in_flight.get(kid)
+            if ek is None or ek.gen != gen:
+                return True
+            if ek.overhead_left > 1e-12 or ek.div_left > 1e-9:
+                self._schedule_completion(ek)   # stale estimate; refresh
+                return True
+            self._complete(ek)
+        elif kind == "fswitch":
+            self.freq = payload
+            self._pending_freq = None
+            for ek in self.in_flight.values():
+                self._schedule_completion(ek)
+        elif kind == "tick":
+            self.policy.on_tick(self.now)
+            self._push(self.now + self.policy.tick_interval, "tick", None)
+        elif kind == "unhold":
+            self.policy.release_hold(payload)
+        # policy reacts to the new state (apply first so context
+        # switches / grows take effect before dispatch decisions)
+        self._apply_allocations()
+        self.policy.step(self.now)
+        for c in self.clients:
+            c.start_next_job(self.now)
+        self.policy.step(self.now)
+        self._apply_allocations()
+        return True
+
+    def run(self) -> "SimResult":
+        self.start()
+        while self.step_event():
+            pass
         return SimResult(self)
 
 
@@ -299,6 +388,7 @@ class ClientMetrics:
     arrivals: list[float] = None
     horizon: float = 0.0
     cid: int = -1                       # node-global client id
+    kernels_per_job: float = 0.0        # mean kernels of the jobs issued
 
     def _lat(self, warmup: float = 0.0) -> list[float]:
         if warmup <= 0 or not self.arrivals:
@@ -350,7 +440,10 @@ class SimResult:
             throughput=c.throughput(sim.horizon),
             latencies=c.latencies(), slice_seconds=c.slice_seconds,
             arrivals=[j.arrival for j in c.completed], horizon=sim.horizon,
-            cid=c.cid)
+            cid=c.cid,
+            kernels_per_job=(sum(c.job_kernel_counts)
+                             / len(c.job_kernel_counts)
+                             if c.job_kernel_counts else 0.0))
             for c in sim.clients]
 
     @property

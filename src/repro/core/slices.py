@@ -256,3 +256,90 @@ class SliceMap:
         closed = sum(r.duration for r in self.ledger if not r.open)
         assert abs(closed - self.lent_slice_seconds) < 1e-9
         return True
+
+
+# ---------------------------------------------------------------------------
+# Node-level lending ledger (cross-device TPC stealing)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class NodeLendRecord:
+    """One client queue hosted away from its home device.
+
+    The node-scale mirror of :class:`LendRecord`: instead of one slice lent
+    across an ownership boundary for one kernel, this is one *device's worth
+    of stealable capacity* lent across a device boundary for one migration
+    interval.  ``home`` is the device the router placed the client on (the
+    saturated borrower of help); ``host`` is the idle device donating its
+    capacity by hosting the queue."""
+
+    cid: int
+    home: int
+    host: int
+    t_start: float
+    t_end: Optional[float] = None   # None while the client is away
+
+    @property
+    def open(self) -> bool:
+        return self.t_end is None
+
+    @property
+    def duration(self) -> float:
+        return 0.0 if self.t_end is None else self.t_end - self.t_start
+
+
+class NodeLedger:
+    """Cross-device donation bookkeeping for the NodeCoordinator.
+
+    Tracks each client's home (router placement) and current device, records
+    a :class:`NodeLendRecord` per away interval, and extends the SliceMap
+    conservation story across the node: at any instant every client is
+    hosted by exactly one device, and the open records are exactly the
+    clients hosted off their home device."""
+
+    def __init__(self, n_devices: int, placement: Sequence[int]):
+        self.n_devices = n_devices
+        self.home: dict[int, int] = dict(enumerate(placement))
+        self.current: dict[int, int] = dict(enumerate(placement))
+        self.ledger: list[NodeLendRecord] = []
+        self._open: dict[int, NodeLendRecord] = {}
+        self.lent_client_seconds = 0.0  # closed away-intervals, from ledger
+        self.n_migrations = 0
+
+    def migrate(self, cid: int, dst: int, now: float):
+        """Record that ``cid``'s launch queue moved to device ``dst``."""
+        assert 0 <= dst < self.n_devices
+        src = self.current[cid]
+        assert dst != src, (cid, dst)
+        rec = self._open.pop(cid, None)
+        if rec is not None:             # returning home or re-lending
+            assert now >= rec.t_start, (cid, now, rec.t_start)
+            rec.t_end = now
+            self.lent_client_seconds += rec.duration
+        if dst != self.home[cid]:
+            nr = NodeLendRecord(cid, self.home[cid], dst, now)
+            self.ledger.append(nr)
+            self._open[cid] = nr
+        self.current[cid] = dst
+        self.n_migrations += 1
+
+    def donated_seconds(self, now: float) -> float:
+        """Total away time including still-open intervals."""
+        return self.lent_client_seconds + sum(
+            now - r.t_start for r in self._open.values())
+
+    def check(self, hosted: Optional[dict[int, int]] = None):
+        """Conservation across devices: the hosted map (cid -> device, from
+        the live simulators) matches ``current``; open records are exactly
+        the off-home clients; closed durations sum to the counter."""
+        if hosted is not None:
+            assert hosted == self.current, (hosted, self.current)
+        off_home = {cid for cid, d in self.current.items()
+                    if d != self.home[cid]}
+        assert set(self._open) == off_home, (set(self._open), off_home)
+        for cid, rec in self._open.items():
+            assert rec.open and rec.host == self.current[cid]
+            assert rec.home == self.home[cid]
+        closed = sum(r.duration for r in self.ledger if not r.open)
+        assert abs(closed - self.lent_client_seconds) < 1e-9
+        return True

@@ -107,6 +107,39 @@ class NodeSpec:
                    name=f"{n_devices}x-node")
 
 
+@dataclass(frozen=True)
+class NodeConfig:
+    """Node-level lending protocol knobs (cross-device TPC stealing).
+
+    The NodeCoordinator samples per-device pressure every ``epoch`` seconds
+    and, when one device is saturated while another is idle, migrates one
+    best-effort client's launch queue from the saturated device to the idle
+    one (drained at a kernel boundary, charged ``migration_cost`` of
+    dispatch blackout on arrival).
+
+    Pressure signal, per device:
+      * HP queue depth — jobs pending or in progress across HIGH-priority
+        clients (saturated when >= ``hp_depth_hi``), and
+      * SliceMap free-list occupancy — idle-slice fraction (saturated when
+        <= ``free_lo`` with 2+ active tenants contending; a lender when
+        >= ``free_hi`` with no HP backlog).
+
+    ``migration=False`` (the default) is the exact-parity contract: the
+    coordinator never intervenes and the node behaves bit-for-bit like
+    independent per-device runs."""
+
+    migration: bool = False
+    epoch: float = 0.25             # pressure sampling period, seconds
+    hp_depth_hi: int = 2            # HP backlog >= this => saturated
+    free_lo: float = 0.125          # idle fraction <= this (contended) => saturated
+    free_hi: float = 0.5            # idle fraction >= this + no HP backlog => lender
+    migration_cost: float = 0.05    # seconds of dispatch blackout per move
+    cooldown: float = 1.0           # per-client quiet period between moves
+    max_migrations: int = 0         # total cap; 0 = unbounded
+    validate: bool = False          # run cross-device conservation checks
+                                    # at every epoch (tests)
+
+
 _kernel_ids = itertools.count()
 
 

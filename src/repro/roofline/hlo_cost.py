@@ -191,8 +191,15 @@ class HloCostModel:
     # -- per-instruction costs -------------------------------------------------------
 
     def _args(self, rest: str) -> list[str]:
-        """Operand names from the call args (up to the closing paren)."""
+        """Operand names from the call args (up to the closing paren).
+
+        Commas inside shape brackets/layouts (``f32[64,64]{1,0}``) are part
+        of one operand, not separators — splitting on them detaches the
+        operand *name* from its position, which broke positional lookups
+        (dot lhs type -> contracting dims, fusion param -> caller operand).
+        """
         depth, i, out, cur = 1, 0, [], []
+        nest = 0                        # []/{} nesting inside one operand
         while i < len(rest) and depth > 0:
             ch = rest[i]
             if ch == "(":
@@ -201,7 +208,11 @@ class HloCostModel:
                 depth -= 1
                 if depth == 0:
                     break
-            elif ch == "," and depth == 1:
+            elif ch in "[{":
+                nest += 1
+            elif ch in "]}":
+                nest -= 1
+            elif ch == "," and depth == 1 and nest == 0:
                 out.append("".join(cur).strip())
                 cur = []
                 i += 1
@@ -472,3 +483,24 @@ class HloCostModel:
 
 def analyze(hlo_text: str) -> Cost:
     return HloCostModel(hlo_text).total()
+
+
+def xla_cost_dict(raw) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns one properties dict; jax 0.4.3x returns a *list* of
+    per-program dicts (usually length 1).  Merge by summing shared keys so
+    callers can always ``.get("flops")``.
+    """
+    if isinstance(raw, dict):
+        return raw
+    if not raw:
+        return {}
+    merged: dict = {}
+    for d in raw:
+        for k, v in d.items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0.0) + v
+            else:
+                merged.setdefault(k, v)
+    return merged

@@ -10,12 +10,9 @@ from repro.core.types import DeviceSpec
 from repro.core.workloads import (decode_step_trace, prefill_trace,
                                   train_step_trace)
 from repro.roofline.hlo import collective_bytes
-from repro.roofline.hlo_cost import analyze
+from repro.roofline.hlo_cost import analyze, xla_cost_dict
 
 
-@pytest.mark.xfail(reason="pre-existing seed bug: scan trip-count "
-                   "accounting under-counts on this jax version "
-                   "(ROADMAP open items)", strict=False)
 def test_analyzer_counts_scan_trips():
     def f(x, w):
         def body(c, _):
@@ -32,13 +29,10 @@ def test_analyzer_counts_scan_trips():
     expected = 7 * 2 * 64 ** 3
     assert expected <= cost.flops <= 1.05 * expected
     # XLA's own analysis counts the body once — the bug we correct
-    xla = float(comp.cost_analysis().get("flops", 0.0))
+    xla = float(xla_cost_dict(comp.cost_analysis()).get("flops", 0.0))
     assert xla < 0.5 * expected
 
 
-@pytest.mark.xfail(reason="pre-existing seed bug: nested-scan trip-count "
-                   "accounting under-counts on this jax version "
-                   "(ROADMAP open items)", strict=False)
 def test_analyzer_nested_scans():
     def g(x, w):
         def outer(c, _):
