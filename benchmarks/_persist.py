@@ -1,0 +1,88 @@
+"""Shared persistence for benchmark results: one JSON document per bench,
+written next to the repo root (committed for the headline runs, uploaded as
+a CI artifact for the smoke runs).
+
+Schema (one top-level object per file):
+
+    {
+      "bench": "sim_throughput",
+      "git_rev": "<short sha or 'unknown'>",
+      "timestamp": "<iso8601 utc>",
+      "host": {"python": "3.10.16", "numpy": "1.26.4"},
+      "results": [...bench-specific rows...],
+      "meta": {...bench-specific scenario metadata...}
+    }
+
+Use :func:`write_json` from a bench module; use :func:`csv_rows_to_results`
+to wrap the legacy ``fmt_csv`` row lists benches already print.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def git_rev(root: str = ROOT) -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=root, capture_output=True, text=True,
+                             timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def host_info() -> dict:
+    info = {"python": platform.python_version()}
+    try:
+        import numpy
+        info["numpy"] = numpy.__version__
+    except ImportError:                      # pragma: no cover
+        pass
+    return info
+
+
+def write_json(bench: str, results, meta: dict | None = None,
+               path: str | None = None) -> str:
+    """Serialize one bench's results; returns the path written."""
+    doc = {
+        "bench": bench,
+        "git_rev": git_rev(),
+        "timestamp": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "host": host_info(),
+        "results": results,
+        "meta": meta or {},
+    }
+    if path is None:
+        path = os.path.join(ROOT, f"BENCH_{bench.upper()}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"[{bench}] wrote {path}", file=sys.stderr)
+    return path
+
+
+def csv_rows_to_results(rows: list[str]) -> list[dict]:
+    """Convert a bench's printed CSV rows (header row first) into a list of
+    dicts keyed by the header columns — the adapter that lets every legacy
+    ``fmt_csv`` bench persist through :func:`write_json` unchanged."""
+    if not rows:
+        return []
+    header = rows[0].split(",")
+    out = []
+    for row in rows[1:]:
+        cols = row.split(",")
+        # tolerate value cells containing commas (none today, but cheap)
+        if len(cols) > len(header):
+            cols = cols[:len(header) - 1] + [",".join(cols[len(header) - 1:])]
+        out.append(dict(zip(header, cols)))
+    return out

@@ -54,7 +54,7 @@ def setup(hp, a_name, b_name, be_name):
     return hpa, hpb, be, be2
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
     rows = [fmt_csv("bench", "system", "metric", "value", "unit")]
     horizon = 6.0 if quick else 12.0
     hp = hp_services()
@@ -116,6 +116,12 @@ def run(quick: bool = False):
         print(fmt_csv("fig15", "derived", f"best_sota({sota})_p99_over_lithos",
                       f"{get(sota,'p99')/max(get('lithos','p99'),1e-9):.1f}",
                       "x  (paper: 3x vs best SotA)"))
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("inference_stacking", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": 11,
+                    "systems": SYSTEMS,
+                    "combos": [x["combo"] for x in agg["lithos"]]})
     return rows
 
 

@@ -98,7 +98,7 @@ def run_mix(tag, apps, placement, node, horizon, seed, rows):
     return gain, regressed
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
     rows = [fmt_csv("mix", "mode", "metric", "value", "unit")]
     horizon = 3.0 if quick else 10.0
     node = NodeSpec.uniform(2, DEV)
@@ -112,6 +112,11 @@ def run(quick: bool = False):
             failures.append(f"{tag}: HP SLO regressed for {regressed}")
     for r in rows:
         print(r)
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("node_stealing", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": 17,
+                    "node": "2x a100_like"})
     if failures:
         raise RuntimeError("; ".join(failures))
     return rows

@@ -1,0 +1,169 @@
+"""Simulator-core throughput: vectorized engine vs scalar reference.
+
+The scenario is a single A100-like device packed with open-loop inference
+tenants (olmo-1b fwd_infer, fusion=64 -> 3 kernels/request) calibrated to
+~0.85 aggregate offered utilization, so the event stream mixes arrivals,
+dispatches and completions at scale.  Presets:
+
+  * ``trace1m`` — 320 tenants, ~1e6 requests (the headline trajectory
+    committed in BENCH_SIM.json; target >= 10x events/sec vec vs ref)
+  * ``smoke``   — 24 tenants, ~6k requests (CI perf-smoke; asserts an
+    absolute vec events/sec floor)
+
+Both engines run with ``collect_records=False`` (the lean-memory mode) so
+the comparison measures the core, not record retention.  Because the
+reference engine is O(clients) per event, running it over the full 1M
+trace takes hours; ``--ref-fraction`` runs the reference over a leading
+fraction of the horizon instead.  events/sec is a *rate*, so no
+extrapolation is applied — the fraction just bounds wall time, and the
+fraction used is recorded in the JSON.
+
+    PYTHONPATH=src python benchmarks/bench_sim_throughput.py \
+        [--preset trace1m|smoke] [--ref-fraction F] [--engines vec,ref]
+        [--min-events-per-sec N] [--assert-speedup X] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+from benchmarks.scenarios import DEV, fmt_csv
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.lithos import make_policy
+from repro.core.simulator import make_simulator
+from repro.core.types import Priority
+from repro.core.workloads import AppSpec, mean_demand
+
+PRESETS = {
+    # name: (n_clients, target_total_requests)
+    "trace1m": (320, 1_000_000),
+    "smoke": (24, 6_000),
+}
+TOTAL_UTIL = 0.85
+
+
+def build_apps(n_clients: int, total_requests: int):
+    """N identical open-loop inference tenants; returns (apps, horizon)."""
+    cfg = get_config("olmo-1b")
+    proto = AppSpec("t0", cfg, "fwd_infer", priority=Priority.HIGH,
+                    batch=2, fusion=64, prompt_mix=((128, 1.0),))
+    demand = mean_demand(proto, DEV)        # device-seconds per request
+    total_rps = TOTAL_UTIL / demand
+    horizon = total_requests / total_rps
+    rps = total_rps / n_clients
+    apps = [AppSpec(f"t{i}", cfg, "fwd_infer", priority=Priority.HIGH,
+                    batch=2, fusion=64, prompt_mix=((128, 1.0),),
+                    rps=rps, seed=i)
+            for i in range(n_clients)]
+    return apps, horizon
+
+
+def run_engine(engine: str, apps, horizon: float, seed: int = 0):
+    T.reset_kernel_ids()
+    policy = make_policy("lithos", DEV, apps)
+    sim = make_simulator(DEV, apps, policy, engine=engine, horizon=horizon,
+                         seed=seed, collect_records=False)
+    t0 = time.perf_counter()
+    sim.run()
+    wall = time.perf_counter() - t0
+    jobs = sum(len(c.completed) for c in sim.clients)
+    return {
+        "engine": engine,
+        "horizon_s": horizon,
+        "wall_s": round(wall, 3),
+        "events": sim.events,
+        "events_per_sec": round(sim.events / wall, 1),
+        "jobs_completed": jobs,
+        "energy": sim.energy,
+    }
+
+
+def run(quick: bool = False, preset: str | None = None,
+        ref_fraction: float | None = None, engines=("vec", "ref"),
+        min_events_per_sec: float = 0.0, assert_speedup: float = 0.0,
+        json_out: bool = False):
+    preset = preset or ("smoke" if quick else "trace1m")
+    n_clients, total_requests = PRESETS[preset]
+    if ref_fraction is None:
+        ref_fraction = 0.02 if preset == "trace1m" else 1.0
+    apps, horizon = build_apps(n_clients, total_requests)
+
+    rows = [fmt_csv("bench", "engine", "metric", "value", "unit")]
+    results = []
+    for engine in engines:
+        h = horizon * (ref_fraction if engine == "ref" else 1.0)
+        r = run_engine(engine, apps, h)
+        r["horizon_fraction"] = ref_fraction if engine == "ref" else 1.0
+        results.append(r)
+        for metric, unit in (("events", "n"), ("wall_s", "s"),
+                             ("events_per_sec", "ev/s"),
+                             ("jobs_completed", "n")):
+            rows.append(fmt_csv("sim_throughput", engine, metric,
+                                r[metric], unit))
+    by_engine = {r["engine"]: r for r in results}
+    speedup = None
+    if "vec" in by_engine and "ref" in by_engine:
+        speedup = (by_engine["vec"]["events_per_sec"]
+                   / max(by_engine["ref"]["events_per_sec"], 1e-9))
+        rows.append(fmt_csv("sim_throughput", "-", "vec_over_ref",
+                            f"{speedup:.1f}", "x"))
+    for r in rows:
+        print(r)
+
+    meta = {
+        "preset": preset,
+        "n_clients": n_clients,
+        "target_requests": total_requests,
+        "total_util": TOTAL_UTIL,
+        "horizon_s": horizon,
+        "ref_fraction": ref_fraction,
+        "workload": "olmo-1b fwd_infer batch=2 fusion=64 prompt=128",
+        "policy": "lithos",
+        "device": "a100_like",
+        "collect_records": False,
+    }
+    if speedup is not None:
+        meta["speedup_vec_over_ref"] = round(speedup, 2)
+    if json_out:
+        from benchmarks._persist import write_json
+        write_json("sim", results, meta)
+
+    failures = []
+    if min_events_per_sec and "vec" in by_engine:
+        eps = by_engine["vec"]["events_per_sec"]
+        if eps < min_events_per_sec:
+            failures.append(f"vec {eps:.0f} ev/s < floor "
+                            f"{min_events_per_sec:.0f}")
+    if assert_speedup and speedup is not None and speedup < assert_speedup:
+        failures.append(f"speedup {speedup:.1f}x < {assert_speedup:.1f}x")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="trace1m")
+    ap.add_argument("--ref-fraction", type=float, default=None,
+                    help="fraction of the horizon the ref engine runs "
+                         "(default: 0.02 for trace1m, 1.0 for smoke)")
+    ap.add_argument("--engines", default="vec,ref")
+    ap.add_argument("--min-events-per-sec", type=float, default=0.0,
+                    help="fail if the vec engine is slower than this")
+    ap.add_argument("--assert-speedup", type=float, default=0.0,
+                    help="fail if vec/ref events-per-sec ratio is below")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_SIM.json via benchmarks._persist")
+    a = ap.parse_args()
+    run(preset=a.preset, ref_fraction=a.ref_fraction,
+        engines=tuple(s for s in a.engines.split(",") if s),
+        min_events_per_sec=a.min_events_per_sec,
+        assert_speedup=a.assert_speedup, json_out=a.json)

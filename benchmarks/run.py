@@ -1,12 +1,19 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig16,...]
+                                            [--json]
 
 Prints CSV rows (bench,case,...,value,unit) per figure plus derived
-paper-claim comparisons; exits non-zero if any module crashes."""
+paper-claim comparisons; exits non-zero if any module crashes.
+
+``--json`` also persists results through benchmarks._persist for the
+modules that support it (sim_throughput writes BENCH_SIM.json — the
+committed perf trajectory — node_stealing and inference_stacking write
+their own BENCH_*.json artifacts)."""
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -25,6 +32,7 @@ MODULES = [
     ("pallas_atoms", "benchmarks.bench_pallas_atoms"),
     ("node_stacking", "benchmarks.bench_node_stacking"),
     ("node_stealing", "benchmarks.bench_node_stealing"),
+    ("sim_throughput", "benchmarks.bench_sim_throughput"),
 ]
 
 
@@ -34,6 +42,9 @@ def main(argv=None) -> int:
                     help="reduced combination grids / shorter horizons")
     ap.add_argument("--only", default="",
                     help="comma-separated substring filters on module names")
+    ap.add_argument("--json", action="store_true",
+                    help="persist results via benchmarks._persist where "
+                         "the module supports it")
     args = ap.parse_args(argv)
     only = [s for s in args.only.split(",") if s]
 
@@ -46,7 +57,11 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
-            mod.run(quick=args.quick)
+            kw = {"quick": args.quick}
+            if (args.json and "json_out"
+                    in inspect.signature(mod.run).parameters):
+                kw["json_out"] = True
+            mod.run(**kw)
             print(f"[{name}] done in {time.time()-t0:.1f}s", flush=True)
         except Exception:                        # noqa: BLE001
             failures.append(name)

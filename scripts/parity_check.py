@@ -1,0 +1,85 @@
+"""Dev sanity: run every system under both engines, demand bit-for-bit
+equality.  The committed parity suite is tests/test_engine_vec.py; this
+script is the fast manual loop (python scripts/parity_check.py)."""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.lithos import evaluate, SYSTEMS
+from repro.core.scheduler import LithOSConfig
+from repro.core.types import DeviceSpec, Priority
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+
+
+def hp_app(rps=20.0, name="hp"):
+    return AppSpec(name, OLMO, "fwd_infer", priority=Priority.HIGH,
+                   rps=rps, prompt_mix=((128, 1.0),), batch=4, fusion=8)
+
+
+def be_train(name="be"):
+    return AppSpec(name, LLAMA, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8)
+
+
+def rec_sig(res):
+    return [(r.task.kid, r.task.queue_id, r.task.ordinal, r.t_submit,
+             r.t_start, r.t_end, r.slices, r.freq) for r in res.records]
+
+
+def run(system, engine, horizon, cfg=None):
+    T.reset_kernel_ids()
+    return evaluate(system, DEV, [hp_app(), be_train()], horizon=horizon,
+                    seed=0, engine=engine, lithos_config=cfg)
+
+
+def main():
+    horizon = float(sys.argv[1]) if len(sys.argv) > 1 else 2.0
+    configs = {s: None for s in SYSTEMS}
+    configs["lithos-full"] = LithOSConfig(rightsize=True, dvfs=True)
+    failures = 0
+    for label, cfg in configs.items():
+        system = "lithos" if label.startswith("lithos") else label
+        a = run(system, "ref", horizon, cfg)
+        b = run(system, "vec", horizon, cfg)
+        ok = True
+        msgs = []
+        if rec_sig(a) != rec_sig(b):
+            sa, sb = rec_sig(a), rec_sig(b)
+            ok = False
+            n = next((i for i, (x, y) in enumerate(zip(sa, sb)) if x != y),
+                     min(len(sa), len(sb)))
+            msgs.append(f"records differ at #{n}/{len(sa)}v{len(sb)}: "
+                        f"{sa[n] if n < len(sa) else '<end>'} vs "
+                        f"{sb[n] if n < len(sb) else '<end>'}")
+        if a.energy != b.energy:
+            ok = False
+            msgs.append(f"energy {a.energy!r} vs {b.energy!r}")
+        if a.busy_slice_seconds != b.busy_slice_seconds:
+            ok = False
+            msgs.append(f"busy {a.busy_slice_seconds!r} vs "
+                        f"{b.busy_slice_seconds!r}")
+        for ca, cb in zip(a.clients, b.clients):
+            if ca.slice_seconds != cb.slice_seconds:
+                ok = False
+                msgs.append(f"{ca.name} slice_seconds {ca.slice_seconds!r} "
+                            f"vs {cb.slice_seconds!r}")
+            if ca.latencies != cb.latencies:
+                ok = False
+                msgs.append(f"{ca.name} latencies differ "
+                            f"({len(ca.latencies)} vs {len(cb.latencies)})")
+        print(f"{'OK ' if ok else 'FAIL'} {label:14s} "
+              f"records={len(a.records)}")
+        for m in msgs:
+            print(f"     {m}")
+        failures += not ok
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ from typing import Optional
 from repro.core.costmodel import CostModel
 from repro.core.queues import Client
 from repro.core.simulator import ExecKernel, Policy
-from repro.core.slices import SliceMap
+from repro.core.slices import SliceMap, VecSliceMap
 from repro.core.types import CompletionRecord, Priority
 
 
@@ -57,13 +57,43 @@ class FIFOPolicyBase(Policy):
     later arrivals — the head-of-line effect LithOS's atomization removes.
     """
 
+    # whether admit() is side-effect free.  The vec engine's candidate loop
+    # skips admission probes when no slices are free ONLY for pure policies;
+    # impure admission (TGS consumes a token per probe) must still be called
+    # for every ready candidate, exactly like the reference loop does.
+    pure_admit = True
+
     def admit(self, c: Client, now: float) -> bool:
         return True
 
     def _order(self):
         return sorted(self.sim.clients, key=lambda c: -int(c.spec.priority))
 
+    def _order_vec(self):
+        # ready clients only, in the same stable priority order as
+        # ``sorted(clients, key=-priority)`` restricted to them.  Clients
+        # without a dispatchable kernel are strict no-ops in the reference
+        # loop (peek() is None -> continue), so skipping them is exact.
+        return self.sim.ready_by_priority()
+
     def step(self, now: float):
+        sim = self.sim
+        if getattr(sim, "vec", False):
+            if self.pure_admit and sim.free_slices() <= 0:
+                return             # no dispatch possible, no probe effects
+            for c in self._order_vec():
+                task = c.peek()
+                if task is None or not self.admit(c, now):
+                    continue
+                free = sim.free_slices()
+                if free <= 0:
+                    if self.pure_admit:
+                        break      # remaining iterations are no-ops
+                    continue       # HoL: wait for running blocks
+                c.pop()
+                cap = sim.cost.phases(task.work).max_useful_slices
+                sim.start_kernel(c, task, min(cap, free))
+            return
         for c in self._order():
             task = c.peek()
             if task is None or not self.admit(c, now):
@@ -93,6 +123,24 @@ class FIFOPolicyBase(Policy):
                 free -= grow
         return out
 
+    def alloc_changes(self, now: float) -> dict[int, int]:
+        # grown kernels only; everything else keeps its allocation, and the
+        # engine re-checks the interference factor itself
+        free = self.sim.free_slices()
+        if free <= 0:
+            return {}
+        out: dict[int, int] = {}
+        eks = sorted(self.sim.in_flight.values(),
+                     key=lambda e: (-int(e.client.spec.priority), e.t_start))
+        for ek in eks:
+            if free <= 0:
+                break
+            grow = min(ek.phases.max_useful_slices - ek.slices, free)
+            if grow > 0:
+                out[ek.task.kid] = ek.slices + grow
+                free -= grow
+        return out
+
 
 class MPSPolicy(FIFOPolicyBase):
     """Unrestricted concurrency with no prioritization (MPS has none):
@@ -106,6 +154,9 @@ class MPSPolicy(FIFOPolicyBase):
         # FIFO, not priority: MPS is oblivious to tenant priorities
         return self.sim.clients
 
+    def _order_vec(self):
+        return self.sim.ready_clients()     # client-list order, ready only
+
     def allocations(self, now: float) -> dict[int, int]:
         out = {ek.task.kid: ek.slices for ek in self.sim.in_flight.values()}
         free = self.sim.free_slices()
@@ -118,6 +169,17 @@ class MPSPolicy(FIFOPolicyBase):
         for kid, g in extra.items():
             out[kid] += g
         return out
+
+    def alloc_changes(self, now: float) -> dict[int, int]:
+        free = self.sim.free_slices()
+        if free <= 0:
+            return {}
+        inf = self.sim.in_flight
+        headroom = [(ek.task.kid, ek.phases.max_useful_slices - ek.slices)
+                    for ek in inf.values()
+                    if ek.phases.max_useful_slices > ek.slices]
+        extra = equal_share(headroom, free)
+        return {kid: inf[kid].slices + g for kid, g in extra.items() if g > 0}
 
 
 class MIGPolicy(FIFOPolicyBase):
@@ -138,14 +200,19 @@ class MIGPolicy(FIFOPolicyBase):
 
     def attach(self, sim):
         super().attach(sim)
-        self.slices = SliceMap.from_partitions(sim.device.n_slices,
-                                               self.partitions)
+        cls = (VecSliceMap if getattr(sim, "vec", False) else SliceMap)
+        self.slices = cls.from_partitions(sim.device.n_slices,
+                                          self.partitions)
 
     def admit(self, c: Client, now: float) -> bool:
         return self.partitions.get(c.cid, 0) > 0
 
     def step(self, now: float):
-        for c in self._order():
+        sim = self.sim
+        vec = getattr(sim, "vec", False)
+        if vec and self.slices.n_owned_idle_total() == 0:
+            return                  # every partition busy: all no-ops
+        for c in (self._order_vec() if vec else self._order()):
             task = c.peek()
             if task is None or not self.admit(c, now):
                 continue
@@ -165,6 +232,9 @@ class MIGPolicy(FIFOPolicyBase):
     def allocations(self, now: float) -> dict[int, int]:
         return {ek.task.kid: ek.slices
                 for ek in self.sim.in_flight.values()}
+
+    def alloc_changes(self, now: float) -> dict[int, int]:
+        return {}                   # partitions are static: never grows
 
 
 class LimitsPolicy(MIGPolicy):
@@ -186,6 +256,7 @@ class TimeSlicePolicy(FIFOPolicyBase):
         self.quantum = quantum
         self.tick_interval = quantum
         self.turn = 0
+        self._applied_turn: Optional[int] = None   # last turn pushed to engine
 
     def _turn_cid(self) -> int:
         # ``turn`` indexes the client list; compare by cid (client ids are
@@ -196,7 +267,8 @@ class TimeSlicePolicy(FIFOPolicyBase):
     def step(self, now: float):
         # dispatch without a global free check: frozen kernels hold nothing
         turn_cid = self._turn_cid()
-        for c in self._order():
+        vec = getattr(self.sim, "vec", False)
+        for c in (self._order_vec() if vec else self._order()):
             task = c.peek()
             if task is None:
                 continue
@@ -222,6 +294,15 @@ class TimeSlicePolicy(FIFOPolicyBase):
                  if ek.client.cid == turn_cid else 0)
                 for ek in self.sim.in_flight.values()}
 
+    def alloc_changes(self, now: float) -> dict[int, int]:
+        # targets depend only on whose turn it is; dispatches already start
+        # at their target, so between turn rotations nothing can differ
+        tc = self._turn_cid()
+        if tc == self._applied_turn:
+            return {}
+        self._applied_turn = tc
+        return self.allocations(now)
+
 
 class PriorityPolicy(FIFOPolicyBase):
     """CUDA stream priority: HP kernels take slices first, BE gets leftovers
@@ -244,13 +325,19 @@ class REEFPolicy(FIFOPolicyBase):
 
     def __init__(self, reset: bool = False):
         self.reset = reset
+        self._hp_memo: Optional[bool] = None
 
     def _hp_active(self) -> bool:
-        for c in self.sim.clients:
-            if c.spec.priority == Priority.HIGH and (
-                    c.peek() is not None or c.outstanding > 0 or c.pending):
-                return True
-        return False
+        # memoized for the duration of one step() call: within it an HP
+        # client can only pop (peek None but outstanding > 0 — still
+        # active) and the reset branch kills BE kernels only, so the value
+        # cannot flip mid-step
+        if self._hp_memo is None:
+            self._hp_memo = any(
+                c.spec.priority == Priority.HIGH and (
+                    c.peek() is not None or c.outstanding > 0 or c.pending)
+                for c in self.sim.clients)
+        return self._hp_memo
 
     def admit(self, c: Client, now: float) -> bool:
         if c.spec.priority == Priority.HIGH:
@@ -258,6 +345,7 @@ class REEFPolicy(FIFOPolicyBase):
         return not self._hp_active()
 
     def step(self, now: float):
+        self._hp_memo = None
         if self.reset and self._hp_active():
             for ek in list(self.sim.in_flight.values()):
                 if ek.client.spec.priority == Priority.BEST_EFFORT:
@@ -278,6 +366,7 @@ class TGSPolicy(FIFOPolicyBase):
     name = "tgs"
     tick_interval = 10e-3
     interference_penalty = 0.18          # co-runs on MPS-style stacking
+    pure_admit = False                   # admit() consumes a token
 
     def __init__(self, ramp: float = 1.15, collapse: float = 0.25):
         self.rate = 0.5                  # BE duty fraction [0,1]
@@ -316,7 +405,8 @@ class OrionPolicy(FIFOPolicyBase):
 
     def _bound_class(self, ek_or_task) -> bool:
         task = ek_or_task.task if isinstance(ek_or_task, ExecKernel) else ek_or_task
-        return CostModel(self.sim.device).is_compute_bound(task.work)
+        # sim.cost is the same device's model; is_compute_bound is pure
+        return self.sim.cost.is_compute_bound(task.work)
 
     def admit(self, c: Client, now: float) -> bool:
         if c.spec.priority == Priority.HIGH:

@@ -73,19 +73,32 @@ class CostModel:
 
     def __init__(self, device: DeviceSpec):
         self.device = device
+        # phases() is on the per-dispatch hot path; KernelWork is an
+        # unhashable dataclass but (flops, bytes, n_blocks) is its full
+        # identity for this map.  WorkPhases is frozen, so sharing one
+        # instance across dispatches is safe.  Op diversity per trace is
+        # small and bounded, so the cache never grows past a few hundred
+        # entries even on million-request runs.
+        self._phase_cache: dict[tuple, WorkPhases] = {}
 
     def phases(self, work: KernelWork) -> WorkPhases:
+        key = (work.flops, work.bytes, work.n_blocks)
+        ph = self._phase_cache.get(key)
+        if ph is not None:
+            return ph
         d = self.device
         c_work = work.flops / d.peak_flops          # slice-seconds at f_max
         m_work = work.bytes / d.hbm_bw              # slice-seconds
         max_useful = max(1, math.ceil(work.n_blocks / d.occupancy))
-        return WorkPhases(
+        ph = WorkPhases(
             c_work=c_work,
             m_work=m_work,
             overhead=d.launch_overhead,
             n_blocks=max(1, work.n_blocks),
             max_useful_slices=max_useful,
         )
+        self._phase_cache[key] = ph
+        return ph
 
     def latency(self, work: KernelWork, t: int, f: float = 1.0) -> float:
         return self.phases(work).latency(t, f, self.device.occupancy)

@@ -7,12 +7,14 @@ the single entry point used by the benchmarks.
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import replace
 from typing import Optional
 
 from repro.core import baselines
 from repro.core.scheduler import LithOSConfig, LithOSScheduler
-from repro.core.simulator import Policy, SimResult, Simulator
+from repro.core.simulator import (Policy, SimResult, Simulator,
+                                  make_simulator)
 from repro.core.types import (DeviceSpec, NodeConfig, NodeSpec, Priority,
                               Quota)
 from repro.core.workloads import AppSpec
@@ -102,12 +104,21 @@ def make_policy(system: str, device: DeviceSpec, apps: list[AppSpec], *,
     return baselines.make_baseline(system)
 
 
+def default_engine() -> str:
+    """Simulator engine unless callers say otherwise: the scalar reference
+    ("ref"), overridable via the REPRO_SIM_ENGINE environment variable
+    (parity CI legs run the whole suite under "vec" this way)."""
+    return os.environ.get("REPRO_SIM_ENGINE", "ref")
+
+
 def evaluate(system: str, device, apps: list[AppSpec], *,
              horizon: float = 30.0, seed: int = 0,
              lithos_config: Optional[LithOSConfig] = None,
              router: str = "least_loaded",
              node_config: Optional[NodeConfig] = None,
-             placement: Optional[list] = None):
+             placement: Optional[list] = None,
+             engine: Optional[str] = None,
+             collect_records: bool = True):
     """Run one system over one workload mix.
 
     ``device`` may be a :class:`DeviceSpec` (single-device path, returns a
@@ -116,18 +127,28 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
     ``NodeResult``; a 1-device node reproduces the DeviceSpec path
     bit-for-bit).  ``node_config`` tunes the node-level lending protocol
     (cross-device TPC stealing); ``placement`` pins tenants to devices,
-    bypassing the router."""
+    bypassing the router.
+
+    ``engine`` picks the simulator core ("ref" | "vec"; default from
+    :func:`default_engine`) — results are bit-for-bit identical, "vec" is
+    faster.  ``collect_records=False`` drops per-kernel records (throughput
+    benchmarks on huge traces)."""
+    if engine is None:
+        engine = default_engine()
     if isinstance(device, NodeSpec):
         from repro.core.node import evaluate_node
         return evaluate_node(system, device, apps, horizon=horizon,
                              seed=seed, lithos_config=lithos_config,
                              router=router, node_config=node_config,
-                             placement=placement)
+                             placement=placement, engine=engine,
+                             collect_records=collect_records)
     if node_config is not None or placement is not None:
         raise ValueError("node_config/placement require a NodeSpec — a bare "
                          "DeviceSpec has no node layer to apply them to")
     policy = make_policy(system, device, apps, lithos_config=lithos_config)
-    sim = Simulator(device, apps, policy, horizon=horizon, seed=seed)
+    sim = make_simulator(device, apps, policy, engine=engine,
+                         horizon=horizon, seed=seed,
+                         collect_records=collect_records)
     res = sim.run()
     res.policy = policy               # expose learned state to benchmarks
     return res
@@ -135,9 +156,10 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
 
 def run_alone(device: DeviceSpec, app: AppSpec, *, horizon: float = 30.0,
               seed: int = 0, system: str = "lithos",
-              lithos_config: Optional[LithOSConfig] = None) -> SimResult:
+              lithos_config: Optional[LithOSConfig] = None,
+              engine: Optional[str] = None) -> SimResult:
     """Solo run of one app — the normalization baseline the paper uses for
     'ideal' latency and throughput-alone."""
     solo = replace(app, quota_slices=device.n_slices)
     return evaluate(system, device, [solo], horizon=horizon, seed=seed,
-                    lithos_config=lithos_config)
+                    lithos_config=lithos_config, engine=engine)

@@ -45,7 +45,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.core.simulator import Policy, SimResult, Simulator
+from repro.core.simulator import (Policy, SimResult, Simulator,
+                                  make_simulator)
 from repro.core.slices import NodeLedger
 from repro.core.types import NodeConfig, NodeSpec, Priority
 from repro.core.workloads import AppSpec, mean_demand
@@ -436,7 +437,9 @@ def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
                   horizon: float = 30.0, seed: int = 0,
                   lithos_config=None, router: str = "least_loaded",
                   node_config: Optional[NodeConfig] = None,
-                  placement: Optional[list[int]] = None) -> NodeResult:
+                  placement: Optional[list[int]] = None,
+                  engine: str = "ref",
+                  collect_records: bool = True) -> NodeResult:
     """Route ``apps`` across the node and run one simulator + policy
     instance per device as interleaved event streams under a
     :class:`NodeCoordinator`.  With migration disabled (the default
@@ -460,8 +463,9 @@ def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
         dev_apps = [apps[i] for i in idx]
         policy = make_policy(system, dev, dev_apps,
                              lithos_config=lithos_config, cids=idx)
-        sim = Simulator(dev, dev_apps, policy, horizon=horizon, seed=seed,
-                        cids=idx)
+        sim = make_simulator(dev, dev_apps, policy, engine=engine,
+                             horizon=horizon, seed=seed, cids=idx,
+                             collect_records=collect_records)
         sims.append(sim)
         policies.append(policy)
     coord = NodeCoordinator(node, list(placement), sims, policies,

@@ -79,6 +79,15 @@ class Client:
         self.job_kernel_counts: list[int] = []   # kernels per issued job
         self.slice_seconds = 0.0
         self._arrivals = spec.arrivals(horizon, self.rng)
+        # Engine hook (VecSimulator): notified after every queue-state
+        # mutation so the engine can maintain incremental ready/startable
+        # sets instead of scanning all clients per event.  None under the
+        # reference engine (one attribute test per mutation, nothing more).
+        self._watch = None
+        # Lean-memory mode (collect_records=False): completed jobs drop
+        # their batch/task objects — million-request traces would otherwise
+        # retain every KernelTask ever executed.
+        self._drop_batches = False
 
     # -- job generation -------------------------------------------------------
 
@@ -124,6 +133,8 @@ class Client:
             return False
         self.batch_idx = 0
         self.kernel_idx = 0
+        if self._watch is not None:
+            self._watch._client_refresh(self)
         return True
 
     def peek(self) -> Optional[KernelTask]:
@@ -141,6 +152,8 @@ class Client:
         assert t is not None
         self.kernel_idx += 1
         self.outstanding += 1
+        if self._watch is not None:
+            self._watch._client_refresh(self)
         return t
 
     def requeue(self, task: KernelTask):
@@ -151,12 +164,15 @@ class Client:
         self.kernel_idx -= 1
         b = self.current.batches[self.batch_idx]
         assert b.tasks[self.kernel_idx].kid == task.kid
+        if self._watch is not None:
+            self._watch._client_refresh(self)
 
     def kernel_done(self, now: float) -> bool:
         """Mark the in-flight kernel complete.  Returns True if this
         finished the whole job."""
         self.outstanding -= 1
         assert self.outstanding == 0
+        done = False
         b = self.current.batches[self.batch_idx]
         if self.kernel_idx >= len(b.tasks):
             # batch done -> sync event -> next batch
@@ -165,9 +181,13 @@ class Client:
             if self.batch_idx >= len(self.current.batches):
                 self.current.t_finish = now
                 self.completed.append(self.current)
+                if self._drop_batches:
+                    self.current.batches = []
                 self.current = None
-                return True
-        return False
+                done = True
+        if self._watch is not None:
+            self._watch._client_refresh(self)
+        return done
 
     # -- metrics -----------------------------------------------------------------
 

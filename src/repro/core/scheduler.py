@@ -32,7 +32,7 @@ from repro.core.predictor import LatencyPredictor
 from repro.core.queues import Client
 from repro.core.rightsizer import RightSizer
 from repro.core.simulator import ExecKernel, Policy
-from repro.core.slices import SliceMap
+from repro.core.slices import SliceMap, VecSliceMap
 from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
                               Priority, Quota)
 
@@ -86,10 +86,22 @@ class LithOSScheduler(Policy):
         self.qstate: dict[int, _QueueState] = {}
         self.pred_log: list[tuple[float, float, int]] = []  # (pred, act, prio)
         self._grown: dict[int, int] = {}
+        # clients with a planned kernel whose next atom is dispatchable
+        # (atoms queued, nothing in flight) — the vec engine's step iterates
+        # these plus the ready set instead of scanning every client
+        self._disp: set[int] = set()
         # draining / paying migration cost.  Counted, not boolean: a stale
         # scheduled unhold (e.g. the migration-cost release of an earlier
         # move) must not cancel a newer drain-hold on the same client.
         self._held: dict[int, int] = {}
+
+    def attach(self, sim):
+        super().attach(sim)
+        if getattr(sim, "vec", False):
+            # same layout/ordering contract, bitmask free-lists; built
+            # fresh from the (unchanged) quotas
+            self.slices = VecSliceMap.from_quotas(self.device.n_slices,
+                                                  self.quotas)
 
     @property
     def stolen_slice_seconds(self) -> float:
@@ -124,7 +136,11 @@ class LithOSScheduler(Policy):
         if self.cfg.steal:
             hp_borrower = (self.quotas.get(for_cid, Quota(0)).priority
                            == Priority.HIGH)
-            for o in self.slices.owners():
+            # owners with nothing idle contribute nothing to the stealable
+            # set regardless of lendability, so only idle owners are probed
+            # (free_for sorts the stealable union by slice id — lender
+            # *membership*, not order, decides the outcome)
+            for o in self.slices.idle_owners():
                 if o == for_cid:
                     continue
                 if hp_borrower or not self._has_work(self.sim.client_by_id[o]):
@@ -170,21 +186,58 @@ class LithOSScheduler(Policy):
 
     # -- dispatch ---------------------------------------------------------------------
 
-    def _dispatch_atom(self, c: Client, now: float) -> bool:
-        qs = self._qs(c.cid)
+    def _sync_disp(self, cid: int, qs: _QueueState):
+        if qs.atoms and qs.in_flight_kid is None:
+            self._disp.add(cid)
+        else:
+            self._disp.discard(cid)
+
+    def _dispatch_atom(self, c: Client, now: float,
+                       qs: Optional[_QueueState] = None) -> bool:
+        if qs is None:
+            qs = self._qs(c.cid)
         if not qs.atoms or qs.in_flight_kid is not None:
             return False
+        if self.slices.total_idle() == 0:
+            return False        # free_for is empty for every client
         prio = self.quotas.get(c.cid, Quota(0)).priority
-        free = self._free_slices(c.cid, now)
-        if not free:
-            return False
-        want = min(qs.parent_slices, len(free))
-        if prio == Priority.BEST_EFFORT:
-            floor = max(1, int(qs.parent_slices * self.cfg.be_min_fraction))
-            if len(free) < floor:
+        if getattr(self.sim, "vec", False):
+            # mask fast path: same chosen set and order as the reference
+            # free_for[:want] (own idle asc, pool asc, stealable asc),
+            # without materializing the full free-id list
+            sm = self.slices
+            steal = 0
+            if self.cfg.steal:
+                if prio == Priority.HIGH:
+                    steal = (sm.idle_owned_union()
+                             & ~sm.own_mask(c.cid))
+                else:
+                    cb = self.sim.client_by_id
+                    for o in sm.idle_owners():
+                        if o != c.cid and not self._has_work(cb[o]):
+                            steal |= sm.idle_own_mask(o)
+            picked, n_free = sm.take_free(c.cid, qs.parent_slices, steal)
+            if not n_free:
                 return False
+            want = min(qs.parent_slices, n_free)
+            if prio == Priority.BEST_EFFORT:
+                floor = max(1, int(qs.parent_slices
+                                   * self.cfg.be_min_fraction))
+                if n_free < floor:
+                    return False
+            chosen = tuple(picked)
+        else:
+            free = self._free_slices(c.cid, now)
+            if not free:
+                return False
+            want = min(qs.parent_slices, len(free))
+            if prio == Priority.BEST_EFFORT:
+                floor = max(1, int(qs.parent_slices
+                                   * self.cfg.be_min_fraction))
+                if len(free) < floor:
+                    return False
+            chosen = tuple(free[:want])
         atom = qs.atoms.popleft()
-        chosen = tuple(free[:want])
         n_atoms = atom.atom_of[2] if atom.atom_of else 1
         pred = self.predictor.predict(atom, want, self.governor.current_f,
                                       n_atoms=n_atoms)
@@ -210,6 +263,45 @@ class LithOSScheduler(Policy):
                 f = self.governor.maybe_switch(now)
                 if f is not None:
                     self.sim.set_frequency(f)
+        if getattr(self.sim, "vec", False):
+            # candidate-set scan: clients that could plan (ready, not
+            # draining) or dispatch a queued atom (_disp).  Everyone else
+            # is a strict no-op in the reference loop below; the sort key
+            # replicates its stable priority order (ties by client-list
+            # position).
+            sim = self.sim
+            cands = [c for c in sim.ready_clients()
+                     if c.cid not in self._held]
+            # slices only free up via release (never during this loop), so
+            # a zero-idle device stays zero-idle: every dispatch attempt is
+            # a guaranteed no-op and _disp clients (planned, waiting on
+            # capacity) can be skipped wholesale.  Ready clients still must
+            # plan (pop + atomize) exactly as the reference loop does.
+            idle = self.slices.total_idle() > 0
+            if idle and self._disp:
+                cb = sim.client_by_id
+                for cid in self._disp:
+                    c = cb.get(cid)
+                    if c is not None:
+                        cands.append(c)
+            if cands:
+                cands.sort(key=lambda c: (
+                    -int(self.quotas.get(c.cid, Quota(0)).priority),
+                    sim.client_pos(c.cid)))
+                for c in cands:
+                    qs = self._qs(c.cid)
+                    if qs.parent is None:
+                        task = c.peek()
+                        if task is None:
+                            continue
+                        c.pop()
+                        self._plan_kernel(c, task, now)
+                    if idle:
+                        if self._dispatch_atom(c, now, qs):
+                            idle = self.slices.total_idle() > 0
+                    self._sync_disp(c.cid, qs)
+            self._grow_inflight(now)
+            return
         order = sorted(
             self.sim.clients,
             key=lambda c: -int(self.quotas.get(c.cid, Quota(0)).priority))
@@ -225,12 +317,15 @@ class LithOSScheduler(Policy):
                     c.pop()
                     self._plan_kernel(c, task, now)
             self._dispatch_atom(c, now)
+            self._sync_disp(c.cid, qs)
         self._grow_inflight(now)
 
     def _grow_inflight(self, now: float):
         """Spread freed slices onto running atoms (remaining thread blocks
         flow onto freed cores — hardware-real growth, never shrink).
         Priority order; each atom grows at most to its planned allocation."""
+        if not self.sim.in_flight or self.slices.total_idle() == 0:
+            return              # nothing to spread / nothing to spread onto
         eks = sorted(self.sim.in_flight.values(),
                      key=lambda e: (-int(self.quotas.get(
                          e.client.cid, Quota(0)).priority), e.t_start))
@@ -253,6 +348,13 @@ class LithOSScheduler(Policy):
         self._grown = {}
         return out
 
+    def alloc_changes(self, now: float) -> dict[int, int]:
+        # only grown atoms ever differ from their current allocation
+        # (interference_penalty is 0: the factor never moves)
+        g = self._grown
+        self._grown = {}
+        return g
+
     def on_complete(self, ek: ExecKernel, rec: CompletionRecord):
         now = rec.t_end
         self._grown.pop(ek.task.kid, None)
@@ -273,6 +375,7 @@ class LithOSScheduler(Policy):
         if not qs.atoms and qs.in_flight_kid is None:
             qs.parent = None
             ek.client.kernel_done(now)
+        self._sync_disp(ek.client.cid, qs)
 
     # -- cross-device migration protocol (node-level lending, §4.3 scaled
     # -- out: the NodeCoordinator drives hold -> drain -> export / import) --
@@ -301,6 +404,7 @@ class LithOSScheduler(Policy):
         assert self.client_drained(cid), "export requires a drained client"
         self.qstate.pop(cid, None)
         self._held.pop(cid, None)       # all holds die with the residency
+        self._disp.discard(cid)
         quota = self.quotas.pop(cid, Quota(0))
         assert self.slices.owned_by(cid) == 0, \
             "only quota-less (BE) clients migrate; slice ownership is static"

@@ -102,6 +102,19 @@ class Policy:
         Default: keep each kernel's current allocation."""
         return {ek.task.kid: ek.slices for ek in self.sim.in_flight.values()}
 
+    def alloc_changes(self, now: float) -> Optional[dict[int, int]]:
+        """Allocation *deltas* for the vectorized engine (engine_vec).
+
+        Return a (possibly empty) dict of kid -> slices covering every
+        in-flight kernel whose allocation MAY differ from its current one;
+        kernels absent from the dict are promised unchanged, so the engine
+        can skip the per-kernel compare-and-reschedule scan entirely when
+        the dict is empty.  Return None (the default) to make the engine
+        fall back to a full ``allocations()`` comparison — always correct,
+        never fast.  The reference engine never calls this; results must be
+        identical either way (the parity suite runs both)."""
+        return None
+
     def on_complete(self, ek: ExecKernel, rec: CompletionRecord):
         pass
 
@@ -125,7 +138,17 @@ class Policy:
 
     def export_client_state(self, cid: int) -> dict:
         """Forget a migrating client; return warm state for the target
-        policy (predictor observations etc.)."""
+        policy (predictor observations etc.).
+
+        Contract: for any policy P with learned per-client state, running
+        ``target.import_client_state(cid, prio, src.export_client_state(cid))``
+        must reproduce that state *exactly* on the target — same predictor
+        nodes, same quota — and remove it from the source (no double
+        residency).  The base class carries no per-client state, so it
+        returns ``{}`` and ``import_client_state`` is a no-op; a policy that
+        learns per-client state MUST override both sides or migration
+        silently discards its warm state (test_policy_state asserts the
+        round-trip for LithOSScheduler)."""
         return {}
 
     def import_client_state(self, cid: int, priority, state: dict):
@@ -133,12 +156,23 @@ class Policy:
 
 
 class Simulator:
+    #: engine discriminator — VecSimulator (engine_vec) sets True; policies
+    #: branch on ``getattr(sim, "vec", False)`` to pick their fast paths
+    vec = False
+
     def __init__(self, device: DeviceSpec, apps: list[AppSpec],
                  policy: Policy, *, horizon: float = 30.0, seed: int = 0,
-                 cids: Optional[list[int]] = None):
+                 cids: Optional[list[int]] = None,
+                 collect_records: bool = True):
         """``cids`` gives each app an explicit client id (default 0..n-1).
         The node layer passes node-global ids so a tenant keeps the same id
-        (and hence the same workload random stream) under any placement."""
+        (and hence the same workload random stream) under any placement.
+
+        ``collect_records=False`` is the lean-memory mode for throughput
+        benchmarks on million-request traces: per-kernel CompletionRecords
+        are not retained and completed jobs drop their batch/task objects.
+        Timing, energy and client metrics are unaffected; it applies
+        identically to both engines so comparisons stay fair."""
         self.device = device
         self.cost = CostModel(device)
         self.policy = policy
@@ -151,7 +185,9 @@ class Simulator:
         self._counter = itertools.count()
         self.energy = 0.0
         self.busy_slice_seconds = 0.0
+        self.events = 0             # events processed (throughput metric)
         self.records: list[CompletionRecord] = []
+        self.collect_records = collect_records
         self.done = False
         # arrival-stream generation per client: bumped on detach so stale
         # arrival events left in the heap are ignored if the client returns
@@ -161,6 +197,9 @@ class Simulator:
         assert len(cids) == len(apps) and len(set(cids)) == len(cids)
         self.clients = [Client(cid, a, horizon, seed=seed)
                         for cid, a in zip(cids, apps)]
+        if not collect_records:
+            for c in self.clients:
+                c._drop_batches = True
         self.client_by_id = {c.cid: c for c in self.clients}
         policy.attach(self)
 
@@ -264,7 +303,8 @@ class Simulator:
         rec = CompletionRecord(task=ek.task, t_submit=ek.t_submit,
                                t_start=ek.t_start, t_end=self.now,
                                slices=ek.slices, freq=self.freq)
-        self.records.append(rec)
+        if self.collect_records:
+            self.records.append(rec)
         self.policy.on_complete(ek, rec)
 
     # -- client migration (node-level lending protocol) --------------------------
@@ -327,6 +367,7 @@ class Simulator:
             self.done = True
             return False
         t, _, kind, payload = heapq.heappop(self._heap)
+        self.events += 1
         if t > self.horizon and kind != "end":
             return True                     # post-horizon stragglers: skip
         self._advance(t)
@@ -454,6 +495,24 @@ class SimResult:
         return next(c for c in self.clients if c.name == name)
 
 
+ENGINES = ("ref", "vec")
+
+
+def make_simulator(device: DeviceSpec, apps: list[AppSpec], policy: Policy,
+                   *, engine: str = "ref", **kw) -> Simulator:
+    """Engine-selecting constructor.  ``ref`` is the scalar oracle defined
+    in this module; ``vec`` is the vectorized core (engine_vec) with a
+    bit-for-bit parity contract against it."""
+    if engine == "vec":
+        from repro.core.engine_vec import VecSimulator
+        return VecSimulator(device, apps, policy, **kw)
+    if engine == "ref":
+        return Simulator(device, apps, policy, **kw)
+    raise ValueError(f"unknown engine {engine!r} (choose from {ENGINES})")
+
+
 def run_sim(device: DeviceSpec, apps: list[AppSpec], policy: Policy, *,
-            horizon: float = 30.0, seed: int = 0) -> SimResult:
-    return Simulator(device, apps, policy, horizon=horizon, seed=seed).run()
+            horizon: float = 30.0, seed: int = 0,
+            engine: str = "ref") -> SimResult:
+    return make_simulator(device, apps, policy, engine=engine,
+                          horizon=horizon, seed=seed).run()

@@ -143,6 +143,18 @@ class NodeConfig:
 _kernel_ids = itertools.count()
 
 
+def reset_kernel_ids():
+    """Restart the global kernel-id counter (parity tests only).
+
+    Kernel ids are drawn from one process-global counter, so two runs of
+    the same scenario in one process get different ``kid`` values.  The
+    engine-parity tests reset the counter before each run so the reference
+    and vectorized engines produce byte-identical CompletionRecord streams,
+    kids included."""
+    global _kernel_ids
+    _kernel_ids = itertools.count()
+
+
 @dataclass
 class KernelWork:
     """Ground-truth work terms (cost-model facts, hidden from the OS).

@@ -298,6 +298,16 @@ def fuse_trace(ops: list[OpDesc], group: int) -> list[OpDesc]:
 # Client workload specs (what the simulator's clients replay)
 # ---------------------------------------------------------------------------
 
+#: memoized fused traces: (id(cfg), kind, shape...) -> (cfg, trace) — see
+#: AppSpec.job_trace.  The entry pins the config object, so an id() can
+#: never be recycled onto a different config while its trace is cached.
+_trace_cache: dict = {}
+
+#: normalized prompt-mix arrays keyed by the (hashable) mix tuple — the
+#: np.array + normalize per draw showed up on million-request traces
+_mix_cache: dict = {}
+
+
 @dataclass
 class AppSpec:
     """One tenant: a model + load pattern + SLO + quota/priority."""
@@ -321,27 +331,62 @@ class AppSpec:
     seed: int = 0
 
     def job_trace(self, rng: np.random.Generator) -> list[OpDesc]:
-        """One request (inference) or one step (training) as fused kernels."""
+        """One request (inference) or one step (training) as fused kernels.
+
+        Trace construction is memoized on the deterministic shape key (the
+        stochastic draws — prompt length, decode count — are taken from
+        ``rng`` exactly as before, so random streams are unchanged).  On
+        million-request traces every arrival used to rebuild an identical
+        op list; now it is built once per distinct shape.  The returned
+        list is shared across jobs and must be treated as read-only."""
         if self.kind == "train":
-            t = train_step_trace(self.cfg, self.train_batch, self.train_seq)
-            return fuse_trace(t, self.fusion)
-        lens, probs = zip(*self.prompt_mix)
-        S = int(rng.choice(lens, p=np.array(probs) / sum(probs)))
+            key = (id(self.cfg), "train", self.train_batch, self.train_seq,
+                   self.fusion)
+            hit = _trace_cache.get(key)
+            if hit is None:
+                t = fuse_trace(train_step_trace(self.cfg, self.train_batch,
+                                                self.train_seq), self.fusion)
+                _trace_cache[key] = (self.cfg, t)
+                return t
+            return hit[1]
+        mix = self.prompt_mix
+        lp = _mix_cache.get(mix)
+        if lp is None:
+            lens, probs = zip(*mix)
+            lp = _mix_cache[mix] = (lens, np.array(probs) / sum(probs))
+        S = int(rng.choice(lp[0], p=lp[1]))
         if self.kind == "fwd_infer":
-            return fuse_trace(prefill_trace(self.cfg, self.batch, S), self.fusion)
+            key = (id(self.cfg), "fwd", self.batch, S, self.fusion)
+            hit = _trace_cache.get(key)
+            if hit is None:
+                t = fuse_trace(prefill_trace(self.cfg, self.batch, S),
+                               self.fusion)
+                _trace_cache[key] = (self.cfg, t)
+                return t
+            return hit[1]
         n_out = max(1, int(rng.geometric(1.0 / self.decode_tokens)))
         n_out = min(n_out, 4 * self.decode_tokens)
-        ops = prefill_trace(self.cfg, self.batch, S)
-        step = decode_step_trace(self.cfg, self.batch, S + n_out // 2)
-        for _ in range(n_out):
-            ops += step
-        return fuse_trace(ops, self.fusion)
+        key = (id(self.cfg), "llm", self.batch, S, n_out, self.fusion)
+        hit = _trace_cache.get(key)
+        if hit is None:
+            ops = prefill_trace(self.cfg, self.batch, S)
+            step = decode_step_trace(self.cfg, self.batch, S + n_out // 2)
+            for _ in range(n_out):
+                ops += step
+            t = fuse_trace(ops, self.fusion)
+            _trace_cache[key] = (self.cfg, t)
+            return t
+        return hit[1]
 
     def arrivals(self, horizon: float, rng: np.random.Generator) -> list[float]:
+        """Whole arrival stream for one client, generated in one batch:
+        Poisson count, then sorted uniform order statistics.  np.sort keeps
+        the historical ``sorted(...)`` result bit-for-bit (same draws, same
+        total order on floats) while scaling to million-request traces."""
         if self.kind == "train" or self.rps <= 0:
             return []               # closed loop
         n = rng.poisson(self.rps * horizon)
-        return sorted(rng.uniform(0.0, horizon, n).tolist())
+        return np.sort(rng.uniform(0.0, horizon, n)).tolist()
 
 
 def mean_demand(spec: AppSpec, device, n_samples: int = 5,

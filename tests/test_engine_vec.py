@@ -1,0 +1,209 @@
+"""Vectorized engine (engine_vec) parity + stepping-API edge cases.
+
+The contract: ``make_simulator(..., engine="vec")`` must be bit-for-bit
+identical to the scalar reference on every scenario — same
+CompletionRecord stream, same energy integral, same busy_slice_seconds,
+same per-client slice_seconds and latency lists.  These tests enforce it
+on the tier-1 scenario shapes across all systems, plus a multi-device
+node run with migration.  ``scripts/parity_check.py`` is the manual loop
+with longer horizons.
+"""
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.lithos import SYSTEMS, evaluate, make_policy
+from repro.core.scheduler import LithOSConfig
+from repro.core.simulator import Simulator, make_simulator
+from repro.core.types import DeviceSpec, NodeConfig, NodeSpec, Priority
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+
+
+def hp_app(rps=20.0, name="hp"):
+    return AppSpec(name, OLMO, "fwd_infer", priority=Priority.HIGH,
+                   rps=rps, prompt_mix=((128, 1.0),), batch=4, fusion=8)
+
+
+def be_train(name="be"):
+    return AppSpec(name, LLAMA, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8)
+
+
+def rec_sig(res):
+    return [(r.task.kid, r.task.queue_id, r.task.ordinal, r.t_submit,
+             r.t_start, r.t_end, r.slices, r.freq) for r in res.records]
+
+
+def assert_bit_identical(a, b):
+    assert rec_sig(a) == rec_sig(b)
+    assert a.energy == b.energy
+    assert a.busy_slice_seconds == b.busy_slice_seconds
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.name == cb.name
+        assert ca.slice_seconds == cb.slice_seconds
+        assert ca.latencies == cb.latencies
+
+
+def run_both(system, horizon=1.0, cfg=None, apps=None):
+    out = []
+    for engine in ("ref", "vec"):
+        T.reset_kernel_ids()        # kid parity across the two runs
+        out.append(evaluate(system, DEV, apps or [hp_app(), be_train()],
+                            horizon=horizon, seed=0, engine=engine,
+                            lithos_config=cfg))
+    return out
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_engine_parity_all_systems(system):
+    a, b = run_both(system)
+    assert len(a.records) > 0
+    assert_bit_identical(a, b)
+
+
+def test_engine_parity_lithos_full_features():
+    """Right-sizing + DVFS exercise fswitch events, probe allocations and
+    allocation growth — the allocation-change fast paths."""
+    a, b = run_both("lithos", horizon=1.5,
+                    cfg=LithOSConfig(rightsize=True, dvfs=True))
+    assert len(a.records) > 0
+    assert_bit_identical(a, b)
+
+
+def test_engine_parity_node_migration():
+    """Multi-device node with the lending protocol: detach/admit/hold and
+    cross-device arrival re-seeding must keep parity."""
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(rps=30.0), be_train("be0"), be_train("be1")]
+    cfg = NodeConfig(migration=True, epoch=0.25, migration_cost=0.05,
+                     cooldown=1.0, free_hi=0.5, free_lo=0.2, hp_depth_hi=3)
+    out = []
+    for engine in ("ref", "vec"):
+        T.reset_kernel_ids()
+        out.append(evaluate("lithos", node, apps, horizon=2.0, seed=0,
+                            placement=[0, 0, 0], node_config=cfg,
+                            engine=engine))
+    a, b = out
+    assert len(a.records) > 0
+    assert rec_sig(a) == rec_sig(b)
+    assert a.energy == b.energy
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.slice_seconds == cb.slice_seconds
+        assert ca.latencies == cb.latencies
+
+
+def test_engine_parity_lean_memory_mode():
+    """collect_records=False must not change metrics, only retention."""
+    out = []
+    for engine in ("ref", "vec"):
+        T.reset_kernel_ids()
+        policy = make_policy("lithos", DEV, [hp_app(), be_train()])
+        sim = make_simulator(DEV, [hp_app(), be_train()], policy,
+                             engine=engine, horizon=1.0, seed=0,
+                             collect_records=False)
+        out.append(sim.run())
+    a, b = out
+    assert a.records == [] and b.records == []
+    assert a.energy == b.energy
+    assert a.busy_slice_seconds == b.busy_slice_seconds
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.latencies == cb.latencies
+
+
+def test_event_counters_match():
+    out = []
+    for engine in ("ref", "vec"):
+        T.reset_kernel_ids()
+        policy = make_policy("lithos", DEV, [hp_app(), be_train()])
+        sim = make_simulator(DEV, [hp_app(), be_train()], policy,
+                             engine=engine, horizon=1.0, seed=0)
+        sim.run()
+        out.append(sim.events)
+    assert out[0] == out[1] and out[0] > 0
+
+
+# -- stepping-API edge cases --------------------------------------------------
+
+
+def _fresh(engine, apps, horizon=0.5, system="lithos"):
+    T.reset_kernel_ids()
+    policy = make_policy(system, DEV, apps)
+    return make_simulator(DEV, apps, policy, engine=engine,
+                          horizon=horizon, seed=0)
+
+
+@pytest.mark.parametrize("engine", ["ref", "vec"])
+def test_step_event_past_horizon(engine):
+    """Stepping after the end event keeps returning False, and post-horizon
+    stragglers are skipped without touching state."""
+    sim = _fresh(engine, [hp_app(rps=50.0)])
+    sim.start()
+    while sim.step_event():
+        pass
+    assert sim.done and sim.now <= sim.horizon
+    e, n = sim.energy, sim.now
+    for _ in range(3):
+        assert sim.step_event() is False
+    assert sim.energy == e and sim.now == n
+
+
+@pytest.mark.parametrize("engine", ["ref", "vec"])
+def test_detach_skips_stale_arrivals(engine):
+    """Detaching a drained client invalidates its queued arrivals: the run
+    completes with no events delivered to the departed client."""
+    apps = [hp_app(rps=40.0, name="a"), hp_app(rps=40.0, name="b")]
+    sim = _fresh(engine, apps, horizon=1.0)
+    sim.start()
+    detached = None
+    for _ in range(10000):
+        if not sim.step_event():
+            break
+        if detached is None:
+            c = sim.client_by_id.get(1)
+            if c is not None and sim.policy.client_drained(1):
+                detached = sim.detach_client(1)
+    assert detached is not None, "client b never drained"
+    assert 1 not in sim.client_by_id
+    while sim.step_event():
+        pass
+    assert sim.done
+    # the detached client processed nothing after leaving
+    n_jobs = len(detached.completed)
+    assert all(j.t_finish is not None for j in detached.completed)
+    assert n_jobs == len(detached.completed)
+
+
+@pytest.mark.parametrize("engine", ["ref", "vec"])
+def test_kill_completed_kernel_generation(engine):
+    """kill() of an already-completed (or never-existing) kid is a no-op
+    returning None, and stale completion events are ignored."""
+    sim = _fresh(engine, [hp_app(rps=50.0)])
+    sim.start()
+    killed = False
+    while sim.step_event():
+        if not killed and sim.in_flight:
+            kid = next(iter(sim.in_flight))
+            task = sim.kill(kid)
+            assert task is not None and task.kid == kid
+            assert kid not in sim.in_flight
+            assert sim.kill(kid) is None          # second kill: no-op
+            killed = True
+    assert killed and sim.done
+
+
+@pytest.mark.parametrize("engine", ["ref", "vec"])
+def test_zero_app_simulator(engine):
+    """A simulator with no clients runs to the horizon: tick + end events
+    only, zero records, idle-power-only energy."""
+    T.reset_kernel_ids()
+    policy = make_policy("mps", DEV, [])
+    sim = make_simulator(DEV, [], policy, engine=engine, horizon=0.5,
+                         seed=0)
+    res = sim.run()
+    assert sim.done and res.records == []
+    assert sim.energy > 0.0            # idle power integrates over 0.5 s
+    assert sim.busy_slice_seconds == 0.0

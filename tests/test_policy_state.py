@@ -1,0 +1,106 @@
+"""Policy.export_client_state / import_client_state round-trip contract.
+
+The base-class docstring promises: export removes the client's state from
+the source policy and returns a dict that, passed to import_client_state
+on a target policy, reproduces the client's scheduling state — for
+LithOSScheduler that means identical predictor weights (the warm latency
+estimates that make post-migration dispatch accurate) and the preserved
+quota.  A policy that exports state the importer silently drops breaks
+migration warm-start; this test pins the contract.
+"""
+import dataclasses
+
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.lithos import make_policy
+from repro.core.simulator import make_simulator
+from repro.core.types import DeviceSpec, Priority, Quota
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+
+
+def apps():
+    return [AppSpec("hp", OLMO, "fwd_infer", priority=Priority.HIGH,
+                    rps=20.0, prompt_mix=((128, 1.0),), batch=4, fusion=8,
+                    quota_slices=DEV.n_slices),
+            AppSpec("be", LLAMA, "fwd_infer", priority=Priority.BEST_EFFORT,
+                    rps=3.0, prompt_mix=((256, 1.0),), batch=1, fusion=8)]
+
+
+def warm_policy():
+    """Run a short sim so the predictor accumulates observations for the
+    BE client (cid 1), then return the policy once the client is drained."""
+    T.reset_kernel_ids()
+    policy = make_policy("lithos", DEV, apps())
+    sim = make_simulator(DEV, apps(), policy, horizon=1.5, seed=0)
+    sim.run()
+    assert policy.client_drained(1), "BE client still has work at horizon"
+    return policy
+
+
+def node_snapshot(predictor, cid):
+    return {k: (dict(v.lat), v.count, v.total_runtime)
+            for k, v in predictor.nodes.items() if k[0] == cid}
+
+
+def test_lithos_export_import_round_trip():
+    src = warm_policy()
+    before = node_snapshot(src.predictor, 1)
+    assert before, "predictor never learned the BE client's kernels"
+    quota_before = src.quotas[1]
+
+    state = src.export_client_state(1)
+    # export is destructive on the source
+    assert node_snapshot(src.predictor, 1) == {}
+    assert 1 not in src.quotas
+
+    T.reset_kernel_ids()
+    dst = make_policy("lithos", DEV, apps()[:1])   # target knows only hp
+    make_simulator(DEV, apps()[:1], dst, horizon=0.5, seed=1)
+    dst.import_client_state(1, Priority.BEST_EFFORT, state)
+
+    # identical predictor weights: same nodes, same (slices, f) -> EWMA
+    # tables, same counts — not approximately, exactly
+    assert node_snapshot(dst.predictor, 1) == before
+    assert dst.quotas[1] == quota_before
+
+
+def test_lithos_export_import_preserves_scheduling_behavior():
+    """A target that imported the state predicts exactly what the source
+    would have predicted for the migrated client's kernels."""
+    src = warm_policy()
+    keys = [k for k in src.predictor.nodes if k[0] == 1]
+    probes = []
+    for k in keys[:8]:
+        node = src.predictor.nodes[k]
+        for (slices, fk) in list(node.lat)[:2]:
+            probes.append((k, slices, fk, node.lat[(slices, fk)]))
+    state = src.export_client_state(1)
+
+    dst = make_policy("lithos", DEV, apps()[:1])
+    make_simulator(DEV, apps()[:1], dst, horizon=0.5, seed=1)
+    dst.import_client_state(1, Priority.BEST_EFFORT, state)
+    for k, slices, fk, expected in probes:
+        assert dst.predictor.nodes[k].lat[(slices, fk)] == expected
+
+
+def test_export_requires_drained_client():
+    T.reset_kernel_ids()
+    policy = make_policy("lithos", DEV, apps())
+    sim = make_simulator(DEV, apps(), policy, horizon=1.0, seed=0)
+    sim.start()
+    # step until the BE client has something in flight, then export must
+    # refuse (the node layer only migrates drained queues)
+    for _ in range(5000):
+        if not sim.step_event():
+            break
+        if not policy.client_drained(1):
+            try:
+                policy.export_client_state(1)
+                raise RuntimeError("export accepted an undrained client")
+            except AssertionError:
+                return
+    raise RuntimeError("BE client was never undrained during the run")
