@@ -1,0 +1,199 @@
+"""Cluster tier at scale: managed placement vs placement-only.
+
+The scenario is the canonical stale-forecast fleet: inference services were
+provisioned onto a block of "service" devices (calibrated to ~0.85 offered
+utilization), best-effort trainers were parked on their own block, and one
+node was provisioned for growth that never came — it sits empty.  A
+placement-only control plane is stuck with that shape; the managed cluster
+tier is not:
+
+  * cross-node stealing migrates trainers from their saturated block into
+    the empty node (the PR 2 lending protocol, one level up), and
+  * the cluster power manager plans per-device DVFS states under a watts
+    budget set to 93% of the unmanaged draw — best-effort-only devices
+    throttle first, service devices keep ``power_hp_floor``.
+
+Both arms run the same pinned placement, the same cluster-global client
+ids (identical workload streams) and the vectorized engine with
+``collect_records=False``.  Presets:
+
+  * ``full``  — 4 nodes x 2 A100s, 2048 services + 8 trainers, >= 1M
+    requests (the committed BENCH_CLUSTER.json trajectory).  The managed
+    arm must strictly improve at least 2 of the 4 headline metrics:
+    aggregate throughput, pooled HP P99.9, mean fragmentation, joules.
+  * ``smoke`` — 3 nodes x 1 A100, 12 services + 2 trainers, ~8k requests
+    (CI perf-smoke; asserts an absolute events/sec floor).
+
+    PYTHONPATH=src python benchmarks/bench_cluster.py \
+        [--preset full|smoke] [--min-events-per-sec N] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import numpy as np
+
+from benchmarks.scenarios import DEV, fmt_csv
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.cluster import evaluate_cluster
+from repro.core.types import (ClusterConfig, ClusterSpec, NodeConfig,
+                              NodeSpec, Priority)
+from repro.core.workloads import cluster_trace_apps
+
+PRESETS = {
+    # name: (n_nodes, devs_per_node, service_nodes, be_nodes, n_services,
+    #        be_per_service_device, total_requests)
+    "full": (4, 2, (0, 1), (2,), 2048, 2, 1_000_000),
+    "smoke": (3, 1, (0,), (1,), 12, 2, 8_000),
+}
+SEED = 11
+CAP_FRACTION = 0.93          # managed power budget vs unmanaged mean draw
+
+MANAGED = dict(migration=True, epoch=0.5, migration_cost=0.25,
+               cooldown=2.0, hp_depth_hi=4, free_lo=0.125, free_hi=0.5,
+               node_config=NodeConfig(migration=True))
+
+
+def build(preset: str):
+    n_nodes, devs, svc_nodes, be_nodes, n_services, be_per, reqs = \
+        PRESETS[preset]
+    cluster = ClusterSpec.uniform(n_nodes, NodeSpec.uniform(devs, DEV))
+    svc_devs = [(n, d) for n in svc_nodes for d in range(devs)]
+    be_devs = [(n, d) for n in be_nodes for d in range(devs)]
+    apps, horizon = cluster_trace_apps(
+        get_config("olmo-1b"), DEV, n_services=n_services,
+        total_requests=reqs, n_devices=len(svc_devs),
+        be_per_device=be_per)
+    # pinned stale-forecast placement: services round-robin their block,
+    # trainers round-robin theirs, the last node stays empty
+    pl, si, bi = [], 0, 0
+    for a in apps:
+        if a.priority == Priority.HIGH:
+            pl.append(svc_devs[si % len(svc_devs)])
+            si += 1
+        else:
+            pl.append(be_devs[bi % len(be_devs)])
+            bi += 1
+    return cluster, apps, pl, horizon
+
+
+def run_arm(cluster, apps, placement, horizon, cfg):
+    T.reset_kernel_ids()
+    t0 = time.perf_counter()
+    res = evaluate_cluster("lithos", cluster, apps, horizon=horizon,
+                           seed=SEED, cluster_config=cfg,
+                           placement=placement, engine="vec",
+                           collect_records=False)
+    wall = time.perf_counter() - t0
+    events = sum(s.events for nc in res.coordinator.node_coords
+                 for s in nc.sims)
+    hp_lat, hp_jobs, be_jobs = [], 0, 0
+    for c in res.clients:
+        if c.priority == Priority.HIGH:
+            hp_lat.extend(c.latencies)
+            hp_jobs += c.n_completed
+        else:
+            be_jobs += c.n_completed
+    return {
+        "wall_s": round(wall, 2),
+        "events": events,
+        "events_per_sec": round(events / wall, 1),
+        "agg_throughput": (hp_jobs + be_jobs) / horizon,
+        "hp_requests": hp_jobs,
+        "be_jobs": be_jobs,
+        "hp_p999_ms": float(np.quantile(hp_lat, 0.999)) * 1e3,
+        "frag_mean": res.frag_mean,
+        "joules": res.energy,
+        "utilization": res.utilization,
+        "migrations": res.migrations,
+        "node_migrations": res.node_migrations,
+        "power_epochs": len(res.power_log),
+    }
+
+
+def run(quick: bool = False, preset: str | None = None,
+        min_events_per_sec: float = 0.0, json_out: bool = False):
+    preset = preset or ("smoke" if quick else "full")
+    cluster, apps, placement, horizon = build(preset)
+
+    base = run_arm(cluster, apps, placement, horizon, ClusterConfig())
+    cap = CAP_FRACTION * base["joules"] / horizon
+    managed = run_arm(cluster, apps, placement, horizon,
+                      ClusterConfig(power_cap=cap, **MANAGED))
+
+    rows = [fmt_csv("bench", "arm", "metric", "value", "unit")]
+    for arm, r in (("placement_only", base), ("managed", managed)):
+        for metric, unit in (
+                ("agg_throughput", "jobs/s"), ("hp_p999_ms", "ms"),
+                ("frag_mean", "frac"), ("joules", "J"),
+                ("hp_requests", "n"), ("be_jobs", "n"),
+                ("utilization", "frac"), ("migrations", "n"),
+                ("node_migrations", "n"), ("events", "n"),
+                ("events_per_sec", "ev/s"), ("wall_s", "s")):
+            v = r[metric]
+            rows.append(fmt_csv("cluster", arm, metric,
+                                f"{v:.4f}" if isinstance(v, float) else v,
+                                unit))
+    improved = {
+        "agg_throughput": managed["agg_throughput"] > base["agg_throughput"],
+        "hp_p999_ms": managed["hp_p999_ms"] < base["hp_p999_ms"],
+        "frag_mean": managed["frag_mean"] < base["frag_mean"],
+        "joules": managed["joules"] < base["joules"],
+    }
+    rows.append(fmt_csv("cluster", "-", "improved_metrics",
+                        "|".join(k for k, v in improved.items() if v)
+                        or "none", ""))
+    for r in rows:
+        print(r)
+
+    if json_out:
+        from benchmarks._persist import write_json
+        write_json("cluster",
+                   [dict(arm="placement_only", **base),
+                    dict(arm="managed", **managed)],
+                   {"preset": preset, "seed": SEED, "horizon_s": horizon,
+                    "n_tenants": len(apps), "power_cap_w": cap,
+                    "cap_fraction": CAP_FRACTION,
+                    "cluster": f"{cluster.n_nodes}x"
+                               f"{cluster.nodes[0].n_devices} a100_like",
+                    "engine": "vec", "collect_records": False,
+                    "improved": sorted(k for k, v in improved.items()
+                                       if v)})
+
+    failures = []
+    if min_events_per_sec:
+        eps = min(base["events_per_sec"], managed["events_per_sec"])
+        if eps < min_events_per_sec:
+            failures.append(f"{eps:.0f} ev/s < floor "
+                            f"{min_events_per_sec:.0f}")
+    if preset == "full":
+        n_up = sum(improved.values())
+        if n_up < 2:
+            failures.append(f"managed arm improved only {n_up}/4 metrics "
+                            f"({improved})")
+        if managed["migrations"] == 0:
+            failures.append("no cross-node migrations fired")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", choices=sorted(PRESETS), default="full")
+    ap.add_argument("--min-events-per-sec", type=float, default=0.0,
+                    help="fail if either arm is slower than this")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_CLUSTER.json via benchmarks._persist")
+    a = ap.parse_args()
+    run(preset=a.preset, min_events_per_sec=a.min_events_per_sec,
+        json_out=a.json)

@@ -5,6 +5,14 @@ total device energy for the same horizon, costs compare P99.  Paper: mean
 ~26% (up to 46%) energy saved for ~7% P99 cost."""
 from __future__ import annotations
 
+import os
+import sys
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
 import numpy as np
 
 from benchmarks.scenarios import (DEV, be_trainers, calibrated,
@@ -13,7 +21,7 @@ from repro.core.lithos import run_alone
 from repro.core.scheduler import LithOSConfig
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
     rows = [fmt_csv("bench", "case", "metric", "value", "unit")]
     cases = {**hp_services(), **be_trainers()}
     if quick:
@@ -44,15 +52,30 @@ def run(quick: bool = False):
                 p99_costs.append(d99 / b99 - 1.0)
                 rows.append(fmt_csv("fig18", name, "p99_cost",
                                     f"{(d99/b99-1)*100:.1f}", "%"))
+    rows.append(fmt_csv("fig18", "derived", "mean_energy_savings",
+                        f"{np.mean(savings)*100:.1f}",
+                        "%  (paper: ~26%, max 46%)"))
+    if p99_costs:
+        rows.append(fmt_csv("fig18", "derived", "mean_p99_cost",
+                            f"{np.mean(p99_costs)*100:.1f}",
+                            "%  (paper: ~7%)"))
     for r in rows:
         print(r)
-    print(fmt_csv("fig18", "derived", "mean_energy_savings",
-                  f"{np.mean(savings)*100:.1f}", "%  (paper: ~26%, max 46%)"))
-    if p99_costs:
-        print(fmt_csv("fig18", "derived", "mean_p99_cost",
-                      f"{np.mean(p99_costs)*100:.1f}", "%  (paper: ~7%)"))
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("dvfs", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": 41,
+                    "slip": 1.1, "cases": sorted(cases),
+                    "device": "a100_like"})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3 workloads, short horizon")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_DVFS.json")
+    args = ap.parse_args()
+    run(quick=args.smoke, json_out=args.json)

@@ -7,8 +7,15 @@ latency normalized to solo and aggregate throughput (HP normalized to load
 4.7x better than MPS; aggregate throughput 1.35x best SotA."""
 from __future__ import annotations
 
+import os
+import sys
 from dataclasses import replace
 from itertools import product
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
 
 import numpy as np
 
@@ -30,7 +37,7 @@ def combos(quick: bool):
     return out[:2] if quick else out[:6]
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
     rows = [fmt_csv("bench", "system", "metric", "value", "unit")]
     horizon = 6.0 if quick else 12.0
     hp, be = hp_services(), be_trainers()
@@ -65,25 +72,39 @@ def run(quick: bool = False):
                             f"{m('be_thr'):.2f}", "x"))
         rows.append(fmt_csv("fig16", system, "aggregate_throughput",
                             f"{aggthr:.2f}", "x"))
-    for r in rows:
-        print(r)
     g = lambda s, k: float(np.mean([x[k] for x in agg[s]]))
     if agg["lithos"] and agg["mps"]:
-        print(fmt_csv("fig16", "derived", "mps_p99_over_lithos",
-                      f"{g('mps','p99_norm')/g('lithos','p99_norm'):.2f}",
-                      "x  (paper: 4.7x)"))
-        print(fmt_csv("fig16", "derived", "lithos_p99_vs_ideal",
-                      f"{g('lithos','p99_norm'):.2f}",
-                      "x  (paper: ~1.2x ideal)"))
+        rows.append(fmt_csv("fig16", "derived", "mps_p99_over_lithos",
+                            f"{g('mps','p99_norm')/g('lithos','p99_norm'):.2f}",
+                            "x  (paper: 4.7x)"))
+        rows.append(fmt_csv("fig16", "derived", "lithos_p99_vs_ideal",
+                            f"{g('lithos','p99_norm'):.2f}",
+                            "x  (paper: ~1.2x ideal)"))
         sotas = [s for s in SYSTEMS if s != "lithos" and agg[s]]
         best = min(sotas, key=lambda s: g(s, "p99_norm"))
         agg_ratio = ((g("lithos", "hp_thr") + g("lithos", "be_thr")) /
                      max(g(best, "hp_thr") + g(best, "be_thr"), 1e-9))
-        print(fmt_csv("fig16", "derived",
-                      f"agg_throughput_vs_best_sota({best})",
-                      f"{agg_ratio:.2f}", "x  (paper: 1.35x vs TGS)"))
+        rows.append(fmt_csv("fig16", "derived",
+                            f"agg_throughput_vs_best_sota({best})",
+                            f"{agg_ratio:.2f}", "x  (paper: 1.35x vs TGS)"))
+    for r in rows:
+        print(r)
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("hybrid_stacking", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": 21,
+                    "systems": SYSTEMS,
+                    "combos": [f"{h}+{b}" for h, b in combos(quick)],
+                    "device": "a100_like"})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 combos, short horizon")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_HYBRID_STACKING.json")
+    args = ap.parse_args()
+    run(quick=args.smoke, json_out=args.json)

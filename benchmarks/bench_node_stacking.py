@@ -85,7 +85,7 @@ def run_node(node: NodeSpec, apps, horizon: float, seed: int,
                                 f"{res.energy:.0f}", "J"))
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
     rows = [fmt_csv("bench", "router", "system", "metric", "value", "unit")]
     horizon = 3.0 if quick else 10.0
     apps4 = node_stacking_apps(DEV, n_hp=2, n_be=2)       # 4 tenants
@@ -97,6 +97,12 @@ def run(quick: bool = False):
                  "node3x7t")
     for r in rows:
         print(r)
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("node_stacking", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": 11,
+                    "systems": SYSTEMS, "routers": ROUTERS,
+                    "device": "a100_like"})
     return rows
 
 
@@ -104,5 +110,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="short horizons, 2-device scenario only")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_NODE_STACKING.json")
     args = ap.parse_args()
-    run(quick=args.smoke)
+    run(quick=args.smoke, json_out=args.json)

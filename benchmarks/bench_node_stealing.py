@@ -125,5 +125,7 @@ def run(quick: bool = False, json_out: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="short horizons")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_NODE_STEALING.json")
     args = ap.parse_args()
-    run(quick=args.smoke)
+    run(quick=args.smoke, json_out=args.json)

@@ -5,6 +5,14 @@ in the time-weighted average of allocated slices.  Paper: mean ~26%
 (up to 51%) capacity saved for a <=4% P99/throughput cost."""
 from __future__ import annotations
 
+import os
+import sys
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
 import numpy as np
 
 from benchmarks.scenarios import (DEV, be_trainers, calibrated,
@@ -17,7 +25,7 @@ def slice_seconds(res, name):
     return max(res.client(name).slice_seconds, 1e-9)
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, json_out: bool = False):
     rows = [fmt_csv("bench", "case", "metric", "value", "unit")]
     cases = {**hp_services(), **be_trainers()}
     if quick:
@@ -53,18 +61,34 @@ def run(quick: bool = False):
             thr_costs.append(1.0 - tr / tb)
             rows.append(fmt_csv("fig17", name, "throughput_cost",
                                 f"{(1-tr/tb)*100:.1f}", "%"))
+    rows.append(fmt_csv("fig17", "derived", "mean_capacity_savings",
+                        f"{np.mean(savings)*100:.1f}",
+                        "%  (paper: ~26%, max 51%)"))
+    if p99_costs:
+        rows.append(fmt_csv("fig17", "derived", "mean_p99_cost",
+                            f"{np.mean(p99_costs)*100:.1f}",
+                            "%  (paper: ~4%)"))
+    if thr_costs:
+        rows.append(fmt_csv("fig17", "derived", "mean_throughput_cost",
+                            f"{np.mean(thr_costs)*100:.1f}",
+                            "%  (paper: ~4%)"))
     for r in rows:
         print(r)
-    print(fmt_csv("fig17", "derived", "mean_capacity_savings",
-                  f"{np.mean(savings)*100:.1f}", "%  (paper: ~26%, max 51%)"))
-    if p99_costs:
-        print(fmt_csv("fig17", "derived", "mean_p99_cost",
-                      f"{np.mean(p99_costs)*100:.1f}", "%  (paper: ~4%)"))
-    if thr_costs:
-        print(fmt_csv("fig17", "derived", "mean_throughput_cost",
-                      f"{np.mean(thr_costs)*100:.1f}", "%  (paper: ~4%)"))
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("rightsizing", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": 31,
+                    "slip": 1.1, "cases": sorted(cases),
+                    "device": "a100_like"})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3 workloads, short horizon")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_RIGHTSIZING.json")
+    args = ap.parse_args()
+    run(quick=args.smoke, json_out=args.json)

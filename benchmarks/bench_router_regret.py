@@ -1,0 +1,133 @@
+"""Router quality: regret vs the oracle placement (carried from PR 1).
+
+Runs the adversarial 6-tenant mix (``scenarios.adversarial_router_apps``)
+on a 2-device node under each placement router, then brute-forces every
+placement (tenant 0 pinned to device 0 — the node is uniform, so mirrored
+placements are equivalent) to find the oracle.  Score is the mean HP SLO
+attainment across the four services; regret is ``oracle - router`` in SLO
+points.  The vectorized engine makes the 32-placement sweep cheap.
+
+The mix is built so the informed routers genuinely rank differently: an
+idle tenant's 24-slice *reservation* (invisible to demand pricing) is
+what starves a co-located hot service.  least_loaded prices that decoy
+by its tiny load and parks a hot service next to it; quota_aware honors
+the guarantee but packs both hot services onto one device's headroom;
+affinity herds the hot services' config group together, accidentally
+isolating them from the decoy (consistently the best of the three,
+still double-digit SLO points short of oracle).  The bench fails if the
+informed routers collapse onto one placement or one score — that would
+mean the scenario stopped discriminating.
+
+    PYTHONPATH=src python benchmarks/bench_router_regret.py \
+        [--smoke] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+import numpy as np
+
+from benchmarks.scenarios import DEV, adversarial_router_apps, fmt_csv
+from repro.core.lithos import evaluate
+from repro.core.node import place
+from repro.core.types import NodeSpec, Priority
+
+ROUTERS = ["round_robin", "least_loaded", "quota_aware", "affinity"]
+SEED = 13
+
+
+def score(res, apps) -> float:
+    """Mean HP SLO attainment — the objective the oracle maximizes."""
+    slo = [res.client(a.name).slo_attainment(a.slo_latency)
+           for a in apps if a.priority == Priority.HIGH]
+    return float(np.mean(slo))
+
+
+def run_placement(node, apps, placement, horizon):
+    res = evaluate("lithos", node, apps, horizon=horizon, seed=SEED,
+                   placement=placement, engine="vec",
+                   collect_records=False)
+    hp99 = [res.client(a.name).p99 for a in apps
+            if a.priority == Priority.HIGH]
+    return score(res, apps), float(max(hp99))
+
+
+def all_placements(n_apps: int, n_devices: int):
+    """Every assignment with tenant 0 pinned to device 0 (uniform node:
+    relabeling devices is a symmetry)."""
+    for mask in range(n_devices ** (n_apps - 1)):
+        pl, m = [0], mask
+        for _ in range(n_apps - 1):
+            pl.append(m % n_devices)
+            m //= n_devices
+        yield pl
+
+
+def run(quick: bool = False, json_out: bool = False):
+    rows = [fmt_csv("bench", "router", "metric", "value", "unit")]
+    horizon = 2.0 if quick else 6.0
+    node = NodeSpec.uniform(2, DEV)
+    apps = adversarial_router_apps(DEV)
+
+    routed = {r: place(node, apps, r) for r in ROUTERS}
+    results = {r: run_placement(node, apps, pl, horizon)
+               for r, pl in routed.items()}
+
+    oracle_pl, oracle_score, oracle_p99 = None, -1.0, float("inf")
+    for pl in all_placements(len(apps), node.n_devices):
+        s, p99 = run_placement(node, apps, pl, horizon)
+        if (s, -p99) > (oracle_score, -oracle_p99):
+            oracle_pl, oracle_score, oracle_p99 = pl, s, p99
+
+    for r in ROUTERS:
+        s, p99 = results[r]
+        rows.append(fmt_csv("router_regret", r, "placement",
+                            "|".join(map(str, routed[r])), "app->dev"))
+        rows.append(fmt_csv("router_regret", r, "mean_hp_slo",
+                            f"{s * 100:.1f}", "%"))
+        rows.append(fmt_csv("router_regret", r, "worst_hp_p99",
+                            f"{p99 * 1e3:.2f}", "ms"))
+        rows.append(fmt_csv("router_regret", r, "regret_vs_oracle",
+                            f"{(oracle_score - s) * 100:.1f}", "SLO pts"))
+    rows.append(fmt_csv("router_regret", "oracle", "placement",
+                        "|".join(map(str, oracle_pl)), "app->dev"))
+    rows.append(fmt_csv("router_regret", "oracle", "mean_hp_slo",
+                        f"{oracle_score * 100:.1f}", "%"))
+    rows.append(fmt_csv("router_regret", "oracle", "worst_hp_p99",
+                        f"{oracle_p99 * 1e3:.2f}", "ms"))
+    for r in rows:
+        print(r)
+
+    if json_out:
+        from benchmarks._persist import csv_rows_to_results, write_json
+        write_json("router_regret", csv_rows_to_results(rows),
+                   {"horizon_s": horizon, "quick": quick, "seed": SEED,
+                    "node": "2x a100_like", "n_tenants": len(apps),
+                    "objective": "mean_hp_slo_attainment"})
+
+    informed = ["least_loaded", "quota_aware", "affinity"]
+    failures = []
+    if len({tuple(routed[r]) for r in informed}) < 2:
+        failures.append("informed routers collapsed onto one placement")
+    if len({round(results[r][0], 3) for r in informed}) < 2:
+        failures.append("informed routers all scored identically "
+                        f"({ {r: results[r][0] for r in informed} })")
+    if failures:
+        raise RuntimeError("; ".join(failures))
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="short horizon")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_ROUTER_REGRET.json")
+    args = ap.parse_args()
+    run(quick=args.smoke, json_out=args.json)

@@ -7,9 +7,10 @@ Prints CSV rows (bench,case,...,value,unit) per figure plus derived
 paper-claim comparisons; exits non-zero if any module crashes.
 
 ``--json`` also persists results through benchmarks._persist for the
-modules that support it (sim_throughput writes BENCH_SIM.json — the
-committed perf trajectory — node_stealing and inference_stacking write
-their own BENCH_*.json artifacts)."""
+modules that support it (sim_throughput writes BENCH_SIM.json and
+cluster writes BENCH_CLUSTER.json — the committed perf trajectories —
+the node/cluster/figure benches write their own BENCH_*.json
+artifacts)."""
 from __future__ import annotations
 
 import argparse
@@ -32,6 +33,8 @@ MODULES = [
     ("pallas_atoms", "benchmarks.bench_pallas_atoms"),
     ("node_stacking", "benchmarks.bench_node_stacking"),
     ("node_stealing", "benchmarks.bench_node_stealing"),
+    ("router_regret", "benchmarks.bench_router_regret"),
+    ("cluster", "benchmarks.bench_cluster"),
     ("sim_throughput", "benchmarks.bench_sim_throughput"),
 ]
 

@@ -115,6 +115,47 @@ def node_stacking_apps(device=DEV, *, n_hp: int = 3,
     return pool[:n_hp] + trainers[:n_be]
 
 
+def adversarial_router_apps(device=DEV) -> list:
+    """A 6-tenant mix built so the informed routers genuinely disagree
+    (the router-regret benchmark's input).
+
+    * ``heavyA``/``heavyB`` — two hot olmo services (~0.5 solo util each).
+      The only good placements keep them apart.
+    * ``decoy`` — a near-idle whisper service holding a 24-slice quota.
+      ``quota_aware`` reserves for the guarantee first, then packs both
+      heavies onto the other device's headroom; ``least_loaded`` prices
+      the decoy by its actual (tiny) load and splits the heavies.
+    * ``light`` — a small whisper service, padding for the quota headroom
+      accounting.
+    * ``trainerA``/``trainerB`` — two olmo BE trainers (closed-loop, so
+      they price at full-device demand and anchor one device each under
+      ``least_loaded``).  They share the heavies' model config, so
+      ``affinity`` herds all four olmo tenants onto one device.
+
+    The trap: the decoy's *reservation* (not its load) is what starves a
+    co-located heavy — 24 reserved slices leave a 30-slice headroom that
+    derived HP shares then split.  ``least_loaded`` prices the decoy at
+    0.15 and parks a heavy next to it; ``quota_aware`` respects the
+    guarantee but packs both heavies onto one device's headroom;
+    ``affinity`` herds the olmo tenants together, which accidentally
+    isolates the heavies from the decoy (consistently the best of the
+    three, still short of oracle).  Three informed routers, three
+    genuinely different placements and scores."""
+    hp = hp_services()
+    be = be_trainers()
+    return [
+        calibrated(replace(hp["resnet"], name="heavyA"), 0.5,
+                   device=device),
+        calibrated(replace(hp["resnet"], name="heavyB"), 0.5,
+                   device=device),
+        calibrated(replace(hp["bert"], name="decoy", quota_slices=24),
+                   0.15, device=device),
+        calibrated(replace(hp["bert"], name="light"), 0.1, device=device),
+        replace(be["olmo_train"], name="trainerA"),
+        replace(be["olmo_train"], name="trainerB"),
+    ]
+
+
 def calibrated_solo_run(app: AppSpec, lithos_config, *, horizon: float,
                         cal_horizon: float, seed: int, device=DEV):
     """Two-phase solo run: a calibration sim lets the predictor /

@@ -48,6 +48,10 @@ class KernelAtomizer:
         self.cfg = config or AtomizerConfig()
         self.atomized = 0
         self.passed_through = 0
+        # Kernel-id stream for fresh atom ids — set to the owning
+        # simulator's stream on policy attach (falls back to the module
+        # global for standalone use in tests).
+        self.kids = None
 
     def plan(self, task: KernelTask, predicted_latency: Optional[float],
              *, unseen_conservative: bool = False) -> int:
@@ -95,8 +99,9 @@ class KernelAtomizer:
                 atom_of=(task.kid, i, n)))
         # fresh kids for atoms (dataclass replace keeps default factory out)
         from repro.core import types as _t
+        kids = self.kids if self.kids is not None else _t._kernel_ids
         for a in atoms:
-            a.kid = next(_t._kernel_ids)
+            a.kid = next(kids)
             a.work.n_blocks = max(1, a.work.n_blocks)
         self.atomized += 1
         return atoms

@@ -38,6 +38,9 @@ class DVFSGovernor:
         self.current_f = 1.0
         self.last_switch = -1e9
         self.switches = 0
+        #: external frequency ceiling (cluster power manager).  1.0 = no cap
+        #: — the governor behaves exactly as before the cluster tier existed.
+        self.f_cap = 1.0
 
     # -- learning -----------------------------------------------------------
 
@@ -68,10 +71,21 @@ class DVFSGovernor:
             return 1.0
         return sum(st.runtime / total * st.s for _, st in items)
 
+    def _clamp(self, f: float) -> float:
+        """Apply the external cap: highest supported state <= ``f_cap``."""
+        if f <= self.f_cap + 1e-9:
+            return f
+        best = None
+        for s in self.device.f_states:
+            if s <= self.f_cap + 1e-9:
+                best = s
+        return best if best is not None else self.device.f_states[0]
+
     def target_frequency(self, queue_id: Optional[int] = None) -> float:
-        """f_final = f_max / (1 + k/S), quantized down to a supported state."""
+        """f_final = f_max / (1 + k/S), quantized down to a supported state,
+        never above the cluster power manager's ``f_cap``."""
         if self.k <= 0:
-            return 1.0
+            return self._clamp(1.0)
         S = self.aggregate_sensitivity(queue_id)
         if S <= 1e-6:
             raw = self.device.f_states[0]
@@ -81,8 +95,8 @@ class DVFSGovernor:
         # state >= raw (conservative: never exceed the slip budget)
         for f in self.device.f_states:
             if f >= raw - 1e-9:
-                return f
-        return 1.0
+                return self._clamp(f)
+        return self._clamp(1.0)
 
     def maybe_switch(self, now: float,
                      queue_id: Optional[int] = None) -> Optional[float]:
@@ -99,3 +113,57 @@ class DVFSGovernor:
 
     def unseen(self, task: KernelTask) -> bool:
         return task.key() not in self.stats
+
+
+def plan_power_budget(devices: list[DeviceSpec], active: list[int],
+                      hp: list[bool], cap: float,
+                      hp_floor: float = 0.75) -> list[float]:
+    """Choose per-device frequency caps so the projected fleet power fits
+    ``cap`` watts.  The cluster tier's planning half of §4.6: the per-device
+    governor optimizes latency-vs-power locally, this allocates the global
+    budget that bounds it.
+
+    ``active`` is each device's busy-slice count and ``hp`` whether it
+    currently runs HIGH-priority work.  Deterministic greedy waterfill: all
+    devices start at f_max; repeatedly step down the frequency of the
+    device with the largest marginal power saving (``active * p_dyn *
+    (f^3 - f_next^3)``), considering best-effort-only devices first and
+    never dropping a device with HP work below ``hp_floor``.  Stops when
+    the projection fits or no step can save anything — static + idle floor
+    power is not reducible by DVFS, so an infeasible cap degrades to
+    every-knob-at-minimum rather than failing."""
+    n = len(devices)
+    idx = [len(d.f_states) - 1 for d in devices]    # start at f_max
+
+    def freq(d):
+        return devices[d].f_states[idx[d]]
+
+    def floor_idx(d):
+        if not hp[d]:
+            return 0
+        states = devices[d].f_states
+        for i, s in enumerate(states):
+            if s >= hp_floor - 1e-9:
+                return i
+        return len(states) - 1
+
+    total = sum(devices[d].power(active[d], freq(d)) for d in range(n))
+    while total > cap + 1e-9:
+        best, best_save = None, 0.0
+        for be_pass in (True, False):
+            for d in range(n):
+                if hp[d] == be_pass:        # BE devices on the first pass
+                    continue
+                if idx[d] <= floor_idx(d):
+                    continue
+                f0, f1 = freq(d), devices[d].f_states[idx[d] - 1]
+                save = active[d] * devices[d].p_dyn * (f0 ** 3 - f1 ** 3)
+                if save > best_save + 1e-12:
+                    best, best_save = d, save
+            if best is not None:
+                break
+        if best is None:
+            break                           # cap below the static floor
+        idx[best] -= 1
+        total -= best_save
+    return [freq(d) for d in range(n)]

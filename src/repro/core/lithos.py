@@ -15,8 +15,8 @@ from repro.core import baselines
 from repro.core.scheduler import LithOSConfig, LithOSScheduler
 from repro.core.simulator import (Policy, SimResult, Simulator,
                                   make_simulator)
-from repro.core.types import (DeviceSpec, NodeConfig, NodeSpec, Priority,
-                              Quota)
+from repro.core.types import (ClusterConfig, ClusterSpec, DeviceSpec,
+                              NodeConfig, NodeSpec, Priority, Quota)
 from repro.core.workloads import AppSpec
 
 SYSTEMS = ("lithos", "mps", "mig", "limits", "timeslice", "priority",
@@ -116,18 +116,24 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
              lithos_config: Optional[LithOSConfig] = None,
              router: str = "least_loaded",
              node_config: Optional[NodeConfig] = None,
+             cluster_config: Optional[ClusterConfig] = None,
              placement: Optional[list] = None,
              engine: Optional[str] = None,
              collect_records: bool = True):
     """Run one system over one workload mix.
 
     ``device`` may be a :class:`DeviceSpec` (single-device path, returns a
-    :class:`SimResult`) or a :class:`NodeSpec` (multi-device path: the node
+    :class:`SimResult`), a :class:`NodeSpec` (multi-device path: the node
     layer routes tenants across devices with ``router`` and returns a
     ``NodeResult``; a 1-device node reproduces the DeviceSpec path
-    bit-for-bit).  ``node_config`` tunes the node-level lending protocol
-    (cross-device TPC stealing); ``placement`` pins tenants to devices,
-    bypassing the router.
+    bit-for-bit), or a :class:`ClusterSpec` (the cluster tier routes
+    tenants across nodes — ``router`` additionally accepts ``frag_aware``
+    — and returns a ``ClusterResult``; a 1-node cluster reproduces the
+    NodeSpec path bit-for-bit).  ``node_config`` tunes the node-level
+    lending protocol (cross-device TPC stealing); ``cluster_config`` the
+    cluster tier (cross-node stealing + power cap, with its own
+    ``node_config`` field for the member nodes); ``placement`` pins tenants
+    to devices (or (node, device) pairs), bypassing the routers.
 
     ``engine`` picks the simulator core ("ref" | "vec"; default from
     :func:`default_engine`) — results are bit-for-bit identical, "vec" is
@@ -135,6 +141,19 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
     benchmarks on huge traces)."""
     if engine is None:
         engine = default_engine()
+    if isinstance(device, ClusterSpec):
+        from repro.core.cluster import evaluate_cluster
+        if node_config is not None:
+            raise ValueError("pass node_config for a ClusterSpec via "
+                             "cluster_config.node_config")
+        return evaluate_cluster(system, device, apps, horizon=horizon,
+                                seed=seed, lithos_config=lithos_config,
+                                router=router,
+                                cluster_config=cluster_config,
+                                placement=placement, engine=engine,
+                                collect_records=collect_records)
+    if cluster_config is not None:
+        raise ValueError("cluster_config requires a ClusterSpec")
     if isinstance(device, NodeSpec):
         from repro.core.node import evaluate_node
         return evaluate_node(system, device, apps, horizon=horizon,

@@ -9,7 +9,9 @@ per-job: a client's stream lives on one device for the simulation, matching
 how serving frameworks pin model replicas (cross-device migration is the
 elastic follow-on in the ROADMAP).
 
-Router policies:
+Router policies (the algorithms live in :func:`repro.core.hierarchy.route`,
+shared with the cluster tier, which routes tenants onto *nodes* with the
+same four policies):
 
 * ``round_robin``   — arrival-order striping; the no-information baseline.
 * ``least_loaded``  — greedy bin-packing of estimated demand (service
@@ -28,30 +30,35 @@ Client ids are node-global (the original app order), so a tenant keeps the
 same workload random stream under every placement — router comparisons see
 identical arrivals, not resampled ones.
 
-Cross-device TPC stealing (the node-level lending protocol) lives in
-:class:`NodeCoordinator`: the per-device simulators run as interleaved event
-streams in global time order, per-device pressure is sampled at a fixed
-epoch, and an idle device lends its capacity to a saturated one by hosting a
+Cross-device TPC stealing (the node-level lending protocol) is one
+instantiation of the level-agnostic
+:class:`~repro.core.hierarchy.HierarchyCoordinator`: each device is a
+:class:`SimMember` (simulator + policy), the coordinator interleaves their
+event streams in global time order, samples per-device pressure at a fixed
+epoch, and lends an idle device's capacity to a saturated one by hosting a
 best-effort tenant's launch queue (drained at a kernel boundary, charged a
 migration cost, predictor warmed from the source device's observations).
-Every donation is recorded in a :class:`~repro.core.slices.NodeLedger`
-mirroring the SliceMap lend ledger, so conservation invariants extend across
-devices.  With ``NodeConfig.migration=False`` (default) the coordinator
-never intervenes and the run is bit-for-bit the historical independent
-per-device evaluation.
+Every donation is recorded in a :class:`~repro.core.slices.MemberLedger`
+mirroring the SliceMap lend ledger, so conservation invariants extend
+across devices.  With ``NodeConfig.migration=False`` (default) the
+coordinator never intervenes and the run is bit-for-bit the historical
+independent per-device evaluation.  The whole node is itself a member one
+level up: :mod:`repro.core.cluster` wraps a NodeCoordinator's stepping
+interface to build clusters of nodes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.hierarchy import (ROUTERS, HierarchyCoordinator, Member,
+                                  Pressure, route)
 from repro.core.simulator import (Policy, SimResult, Simulator,
                                   make_simulator)
-from repro.core.slices import NodeLedger
+from repro.core.slices import MemberLedger
 from repro.core.types import NodeConfig, NodeSpec, Priority
 from repro.core.workloads import AppSpec, mean_demand
 
-ROUTERS = ("round_robin", "least_loaded", "quota_aware", "affinity")
+_Pressure = Pressure                # historical name
 
 
 _demand_cache: dict[tuple, float] = {}
@@ -75,158 +82,63 @@ def demand_estimate(app: AppSpec, device) -> float:
     return _demand_cache[key]
 
 
-def _argmin_load(loads: list[float], node: NodeSpec) -> int:
-    """Device with the lowest capacity-normalized load (ties: lowest id)."""
-    base = node.devices[0].n_slices
-    return min(range(node.n_devices),
-               key=lambda d: (loads[d] * base / node.devices[d].n_slices, d))
-
-
-def _effective_quota(app: AppSpec, node: NodeSpec, n_hp: int, d: int = 0,
-                     headroom: int = None) -> int:
-    """A-priori estimate of the guarantee ``app`` would need on device ``d``.
-
-    Explicit quotas are exact: ``quotas_from_apps`` reserves them first,
-    clamped to the device.  Derived HP shares depend on the final
-    co-placement (they split whatever the explicit reservations leave), so
-    the router estimates them from the device's *unreserved headroom* at
-    decision time, divided by the node-wide HP count — conservative, and it
-    tracks the reserve-explicit-first structure of ``quotas_from_apps``
-    without duplicating its arithmetic against a fixed capacity."""
-    dev = node.devices[d]
-    if app.quota_slices > 0:
-        return min(app.quota_slices, dev.n_slices)
-    if app.priority == Priority.HIGH:
-        cap = dev.n_slices if headroom is None else max(0, headroom)
-        return cap // max(1, n_hp)
-    return 0
-
-
 def place(node: NodeSpec, apps: list[AppSpec],
           router: str = "least_loaded") -> list[int]:
-    """Return the device index for each app.  Deterministic."""
+    """Return the device index for each app.  Deterministic.  Thin wrapper
+    over the level-agnostic :func:`repro.core.hierarchy.route`: the node
+    prices demand on ``devices[0]`` and hands the router plain capacities."""
     if router not in ROUTERS:
         raise ValueError(f"unknown router {router!r} (choose from {ROUTERS})")
-    n = node.n_devices
-    if n == 1:
-        return [0] * len(apps)
-    if router == "round_robin":
-        return [i % n for i in range(len(apps))]
-
-    placement = [0] * len(apps)
-    if router == "least_loaded":
+    caps = [dev.n_slices for dev in node.devices]
+    demands = None
+    if router in ("least_loaded", "affinity") and node.n_devices > 1:
         demands = [demand_estimate(a, node.devices[0]) for a in apps]
-        loads = [0.0] * n
-        for i in sorted(range(len(apps)), key=lambda i: (-demands[i], i)):
-            d = _argmin_load(loads, node)
-            placement[i] = d
-            loads[d] += demands[i]
-        return placement
-
-    if router == "quota_aware":
-        n_hp = sum(1 for a in apps if a.priority == Priority.HIGH)
-        # quota demand is sized per target device (devices may differ),
-        # derived shares against the headroom left after reservations
-        headroom = [dev.n_slices for dev in node.devices]
-        quota_on = lambda i, d: _effective_quota(apps[i], node, n_hp, d,
-                                                 headroom=headroom[d])
-        be_count = [0] * n
-        hp_order = sorted((i for i, a in enumerate(apps)
-                           if a.priority == Priority.HIGH),
-                          key=lambda i: (-max(_effective_quota(
-                              apps[i], node, n_hp, d) for d in range(n)), i))
-        for i in hp_order:
-            # device where the guarantee still fits; else most headroom
-            fits = [d for d in range(n) if headroom[d] >= quota_on(i, d)]
-            cands = fits or range(n)
-            d = min(cands, key=lambda d: (-headroom[d], d))
-            placement[i] = d
-            headroom[d] -= quota_on(i, d)
-        for i, a in enumerate(apps):
-            if a.priority == Priority.HIGH:
-                continue
-            d = min(range(n), key=lambda d: (be_count[d], -headroom[d], d))
-            placement[i] = d
-            be_count[d] += 1
-        return placement
-
-    if router == "affinity":
-        groups: dict[str, list[int]] = {}
-        for i, a in enumerate(apps):
-            groups.setdefault(a.cfg.name, []).append(i)
-        demands = [demand_estimate(a, node.devices[0]) for a in apps]
-        gload = {g: sum(demands[i] for i in ids) for g, ids in groups.items()}
-        loads = [0.0] * n
-        for g in sorted(groups, key=lambda g: (-gload[g], g)):
-            d = _argmin_load(loads, node)
-            for i in groups[g]:
-                placement[i] = d
-            loads[d] += gload[g]
-        return placement
-
-    raise AssertionError(f"unhandled router {router!r}")  # ROUTERS is closed
+    return route(caps, apps, router, demands=demands)
 
 
-@dataclass
-class _Pressure:
-    """One device's pressure sample (the lending protocol's signal)."""
+class SimMember(Member):
+    """One device as a hierarchy member: a simulator plus its policy.
 
-    hp_depth: int                   # HP jobs pending or in progress
-    free_frac: float                # SliceMap free-list occupancy
-    active: int                     # clients with work
+    The leaf adapter — pressure comes from the live client queues and the
+    policy's SliceMap free-list, and the migration protocol maps straight
+    onto the PR 2 plumbing (policy hold/drain/export + simulator
+    detach/admit/release)."""
 
+    def __init__(self, sim: Simulator, policy: Policy):
+        self.sim = sim
+        self.policy = policy
+        self.capacity = sim.device.n_slices
 
-@dataclass
-class _PendingMigration:
-    cid: int
-    src: int
-    dst: int
-    t_decided: float
+    # -- event stream -------------------------------------------------------
 
+    @property
+    def horizon(self) -> float:
+        return self.sim.horizon
 
-class NodeCoordinator:
-    """Runs the per-device simulators as interleaved event streams and
-    drives the node-level lending protocol (cross-device TPC stealing).
+    def start(self):
+        self.sim.start()
 
-    The loop always steps the simulator with the globally earliest pending
-    event, so device clocks stay within one event of each other — the
-    precondition for sampling a coherent node-wide pressure snapshot every
-    ``config.epoch`` seconds and for moving a launch queue between devices
-    without time travel.
+    def peek_time(self):
+        return self.sim.peek_time()
 
-    Migration of a chosen best-effort client proceeds in three phases:
+    def step_event(self) -> bool:
+        return self.sim.step_event()
 
-    1. **hold** — the source policy stops planning new kernels for the
-       client; its in-flight kernel drains at the atom boundary;
-    2. **detach / export** — once drained (observed after a source event),
-       the client object moves with its launch queue, pending jobs and RNG
-       stream intact; the source policy exports its predictor observations;
-    3. **admit / warm** — the target admits the client immediately (so it is
-       never unaccounted for), imports the warm predictor state, and holds
-       dispatch for ``migration_cost`` seconds — the price of moving a
-       replica's working state between devices.
+    @property
+    def done(self) -> bool:
+        return self.sim.done
 
-    Every move is recorded in a :class:`NodeLedger`; ``config.validate``
-    additionally re-checks cross-device conservation at every epoch.
-    """
+    # -- pressure / placement ----------------------------------------------
 
-    def __init__(self, node: NodeSpec, placement: list[int],
-                 sims: list[Simulator], policies: list[Policy],
-                 config: Optional[NodeConfig] = None):
-        self.node = node
-        self.placement = placement
-        self.sims = sims
-        self.policies = policies
-        self.config = config or NodeConfig()
-        self.ledger = NodeLedger(node.n_devices, placement)
-        self._pending: Optional[_PendingMigration] = None
-        self._last_move: dict[int, float] = {}
-        self.migration_log: list[tuple[float, int, int, int]] = []
+    def _free(self) -> int:
+        sm = getattr(self.policy, "slices", None)
+        if sm is not None:
+            cnt = sm.counts()
+            return cnt["owned_idle"] + cnt["pool_idle"]
+        return self.sim.free_slices()
 
-    # -- pressure sampling ---------------------------------------------------
-
-    def _pressure(self, d: int) -> _Pressure:
-        sim = self.sims[d]
+    def pressure(self) -> Pressure:
+        sim = self.sim
         hp_depth = 0
         active = 0
         for c in sim.clients:
@@ -237,155 +149,96 @@ class NodeCoordinator:
             if c.priority == Priority.HIGH:
                 hp_depth += len(c.pending) + (1 if c.current is not None
                                               else 0)
-        sm = getattr(self.policies[d], "slices", None)
-        if sm is not None:
-            cnt = sm.counts()
-            free = cnt["owned_idle"] + cnt["pool_idle"]
-        else:
-            free = sim.free_slices()
-        return _Pressure(hp_depth, free / sim.device.n_slices, active)
+        return Pressure(hp_depth, self._free() / sim.device.n_slices, active)
 
-    def _saturated(self, p: _Pressure) -> bool:
-        cfg = self.config
-        return (p.hp_depth >= cfg.hp_depth_hi
-                or (p.free_frac <= cfg.free_lo and p.active >= 2))
+    def free_snapshot(self) -> list[int]:
+        return [self._free()]
 
-    def _lender(self, p: _Pressure) -> bool:
-        cfg = self.config
-        return p.hp_depth == 0 and p.free_frac >= cfg.free_hi
+    # -- migration protocol -------------------------------------------------
 
-    # -- migration decisions -------------------------------------------------
+    def supports_migration(self) -> bool:
+        return self.policy.supports_migration
 
-    def _candidates(self, d: int, now: float) -> list[int]:
-        """BE clients on device ``d`` eligible to move: have work, not in a
-        cooldown window, and own no slices — ownership is static for a
-        simulation, so a BE tenant with an *explicit* quota (legitimately
-        granted by ``quotas_from_apps``) is pinned like an HP tenant.
-        Ascending cid — deterministic."""
-        sm = getattr(self.policies[d], "slices", None)
+    def migration_candidates(self) -> list[int]:
+        """BE clients eligible to move: have work and own no slices —
+        ownership is static for a simulation, so a BE tenant with an
+        *explicit* quota (legitimately granted by ``quotas_from_apps``) is
+        pinned like an HP tenant.  Ascending cid — deterministic."""
+        sm = getattr(self.policy, "slices", None)
         out = []
-        for c in self.sims[d].clients:
+        for c in self.sim.clients:
             if c.priority == Priority.HIGH:
                 continue
             if sm is not None and sm.owned_by(c.cid) > 0:
                 continue
             if not (c.closed_loop or c.current is not None or c.pending):
                 continue
-            if now < self._last_move.get(c.cid, -1e18) + self.config.cooldown:
-                continue
             out.append(c.cid)
         return sorted(out)
 
-    def _epoch(self, now: float):
-        cfg = self.config
-        if cfg.validate:
-            self.check()
-        if self._pending is not None:
-            return                          # one drain in progress at a time
-        if cfg.max_migrations and \
-                self.ledger.n_migrations >= cfg.max_migrations:
-            return
-        if not all(p.supports_migration for p in self.policies):
-            return
-        press = [self._pressure(d) for d in range(self.node.n_devices)]
-        lenders = [d for d in range(self.node.n_devices)
-                   if self._lender(press[d])]
-        if not lenders:
-            return
-        # most-pressured saturated device with an eligible BE tenant first
-        sat = sorted((d for d in range(self.node.n_devices)
-                      if self._saturated(press[d])),
-                     key=lambda d: (-press[d].hp_depth, press[d].free_frac,
-                                    d))
-        for src in sat:
-            cands = self._candidates(src, now)
-            if not cands:
-                continue
-            dst = max((d for d in lenders if d != src),
-                      key=lambda d: (press[d].free_frac, -d), default=None)
-            if dst is None:
-                continue
-            cid = cands[0]
-            self._pending = _PendingMigration(cid, src, dst, now)
-            self.policies[src].hold_client(cid)   # begin draining
-            self._maybe_execute(src)              # may already be drained
-            return
+    def begin_drain(self, cid: int):
+        self.policy.hold_client(cid)
 
-    def _maybe_execute(self, d: int):
-        """Execute the pending migration once its client has drained (called
-        after every event on the source device)."""
-        pm = self._pending
-        if pm is None or pm.src != d:
-            return
-        src_sim, dst_sim = self.sims[pm.src], self.sims[pm.dst]
-        if src_sim.done:                        # horizon beat the drain
-            self.policies[pm.src].release_hold(pm.cid)
-            self._pending = None
-            return
-        if not self.policies[pm.src].client_drained(pm.cid):
-            return
-        # The migration is anchored at the *decision-or-later* instant: a
-        # saturated device's clock (its last processed event) can lag the
-        # epoch that decided the move, and stamping the ledger / cooldown /
-        # cost with the stale clock would erode the cooldown window and
-        # over-count donated seconds.  The arrival cutoff, by contrast, is
-        # exactly what the source actually processed (its own clock).
-        t_mig = max(src_sim.now, pm.t_decided)
-        state = self.policies[pm.src].export_client_state(pm.cid)
-        client = src_sim.detach_client(pm.cid)
-        self.policies[pm.dst].import_client_state(pm.cid, client.priority,
-                                                  state)
-        dst_sim.admit_client(client, after=src_sim.now)
-        self.policies[pm.dst].hold_client(pm.cid)
-        dst_sim.schedule_release(pm.cid, t_mig + self.config.migration_cost)
-        self.ledger.migrate(pm.cid, pm.dst, t_mig)
-        self._last_move[pm.cid] = t_mig
-        self.migration_log.append((t_mig, pm.cid, pm.src, pm.dst))
-        self._pending = None
+    def abort_drain(self, cid: int):
+        self.policy.release_hold(cid)
 
-    # -- invariants ----------------------------------------------------------
+    def drain_dead(self, cid: int) -> bool:
+        return self.sim.done                # horizon beat the drain
 
-    def check(self) -> bool:
-        """Cross-device conservation: every client hosted exactly once, the
-        ledger agrees with the live hosting map, and each device's SliceMap
-        invariants hold."""
-        hosted: dict[int, int] = {}
-        for d, sim in enumerate(self.sims):
-            for c in sim.clients:
-                assert c.cid not in hosted, f"client {c.cid} hosted twice"
-                hosted[c.cid] = d
-        self.ledger.check(hosted)
-        for p in self.policies:
-            sm = getattr(p, "slices", None)
-            if sm is not None:
-                sm.check()
+    def drained(self, cid: int) -> bool:
+        return self.policy.client_drained(cid)
+
+    def clock(self, cid: int) -> float:
+        return self.sim.now
+
+    def export_client(self, cid: int):
+        state = self.policy.export_client_state(cid)
+        client = self.sim.detach_client(cid)
+        return client, client.priority, state
+
+    def admit_client(self, client, priority, state, *, after: float,
+                     release_at: float):
+        self.policy.import_client_state(client.cid, priority, state)
+        self.sim.admit_client(client, after=after)
+        self.policy.hold_client(client.cid)
+        self.sim.schedule_release(client.cid, release_at)
+
+    # -- invariants ---------------------------------------------------------
+
+    def hosted_cids(self) -> list[int]:
+        return [c.cid for c in self.sim.clients]
+
+    def check(self):
+        sm = getattr(self.policy, "slices", None)
+        if sm is not None:
+            sm.check()
         return True
 
-    # -- interleaved run loop ------------------------------------------------
+
+class NodeCoordinator(HierarchyCoordinator):
+    """The node tier: per-device simulators as interleaved event streams
+    plus the node-level lending protocol (cross-device TPC stealing).
+
+    All mechanism — the globally-earliest-event loop, epoch pressure
+    sampling, hold -> drain -> export -> admit migration, ledger
+    conservation — lives in :class:`HierarchyCoordinator`; this class binds
+    it to devices and keeps the node-tier construction/read surface
+    (``sims``, ``policies``, ``run() -> [SimResult]``).
+    """
+
+    def __init__(self, node: NodeSpec, placement, sims: list[Simulator],
+                 policies: list[Policy],
+                 config: Optional[NodeConfig] = None):
+        self.node = node
+        self.placement = placement
+        self.sims = sims
+        self.policies = policies
+        super().__init__([SimMember(s, p) for s, p in zip(sims, policies)],
+                         config or NodeConfig(),
+                         MemberLedger(node.n_devices, placement))
 
     def run(self) -> list[SimResult]:
-        cfg = self.config
-        for sim in self.sims:
-            sim.start()
-        migrate = cfg.migration and self.node.n_devices > 1
-        next_epoch = cfg.epoch if migrate else float("inf")
-        horizon = self.sims[0].horizon
-        active = set(range(len(self.sims)))
-        while active:
-            d = min((i for i in active if self.sims[i].peek_time() is not None),
-                    key=lambda i: (self.sims[i].peek_time(), i), default=None)
-            if d is None:
-                break
-            t = self.sims[d].peek_time()
-            while migrate and t >= next_epoch and next_epoch <= horizon:
-                self._epoch(next_epoch)
-                next_epoch += cfg.epoch
-            if not self.sims[d].step_event():
-                active.discard(d)
-            if migrate:
-                self._maybe_execute(d)
-        if cfg.validate:
-            self.check()
+        self.run_loop()
         return [SimResult(sim) for sim in self.sims]
 
 
@@ -395,7 +248,7 @@ class NodeResult:
     (``client(name)``, ``clients``, ``energy``, ``utilization``,
     ``records``)."""
 
-    def __init__(self, node: NodeSpec, router: str, placement: list[int],
+    def __init__(self, node: NodeSpec, router: str, placement,
                  results: list[SimResult], policies: list,
                  coordinator: Optional[NodeCoordinator] = None):
         self.node = node
@@ -433,6 +286,43 @@ class NodeResult:
         return self.placement[cid]
 
 
+def build_node(system: str, node: NodeSpec, apps: list[AppSpec],
+               placement: list[int], *, horizon: float, seed: int = 0,
+               lithos_config=None, node_config: Optional[NodeConfig] = None,
+               engine: str = "ref", collect_records: bool = True,
+               cids: Optional[list[int]] = None) -> NodeCoordinator:
+    """Construct one node's simulators + policies and wrap them in a
+    :class:`NodeCoordinator` (not yet run).
+
+    ``cids`` optionally assigns each app a global client id (the cluster
+    tier passes cluster-global ids so tenants keep their workload streams
+    under any node assignment); default is app order, the node-global ids
+    ``evaluate_node`` has always used.  With explicit cids the coordinator's
+    ledger is keyed by those ids (a dict placement)."""
+    from repro.core.lithos import make_policy
+
+    assert len(placement) == len(apps) and \
+        all(0 <= d < node.n_devices for d in placement)
+    ids = list(range(len(apps))) if cids is None else list(cids)
+    sims: list[Simulator] = []
+    policies = []
+    for d, dev in enumerate(node.devices):
+        on_d = [i for i, p in enumerate(placement) if p == d]
+        idx = [ids[i] for i in on_d]
+        dev_apps = [apps[i] for i in on_d]
+        policy = make_policy(system, dev, dev_apps,
+                             lithos_config=lithos_config, cids=idx)
+        sim = make_simulator(dev, dev_apps, policy, engine=engine,
+                             horizon=horizon, seed=seed, cids=idx,
+                             collect_records=collect_records)
+        sims.append(sim)
+        policies.append(policy)
+    ledger_placement = (list(placement) if cids is None else
+                        {ids[i]: placement[i] for i in range(len(apps))})
+    return NodeCoordinator(node, ledger_placement, sims, policies,
+                           config=node_config)
+
+
 def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
                   horizon: float = 30.0, seed: int = 0,
                   lithos_config=None, router: str = "least_loaded",
@@ -450,26 +340,12 @@ def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
 
     ``placement`` overrides the router's decision (benchmarks pin
     adversarial placements with it)."""
-    from repro.core.lithos import make_policy
-
     if placement is None:
         placement = place(node, apps, router)
-    assert len(placement) == len(apps) and \
-        all(0 <= d < node.n_devices for d in placement)
-    sims: list[Simulator] = []
-    policies = []
-    for d, dev in enumerate(node.devices):
-        idx = [i for i, p in enumerate(placement) if p == d]
-        dev_apps = [apps[i] for i in idx]
-        policy = make_policy(system, dev, dev_apps,
-                             lithos_config=lithos_config, cids=idx)
-        sim = make_simulator(dev, dev_apps, policy, engine=engine,
-                             horizon=horizon, seed=seed, cids=idx,
-                             collect_records=collect_records)
-        sims.append(sim)
-        policies.append(policy)
-    coord = NodeCoordinator(node, list(placement), sims, policies,
-                            config=node_config)
+    coord = build_node(system, node, apps, list(placement), horizon=horizon,
+                       seed=seed, lithos_config=lithos_config,
+                       node_config=node_config, engine=engine,
+                       collect_records=collect_records)
     results = coord.run()
-    return NodeResult(node, router, list(placement), results, policies,
-                      coordinator=coord)
+    return NodeResult(node, router, list(placement), results,
+                      coord.policies, coordinator=coord)

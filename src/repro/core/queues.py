@@ -45,16 +45,19 @@ class Job:
 
 
 def _build_batches(ops: list[OpDesc], client_id: int, queue_id: int,
-                   batch_marks: list[int]) -> list[Batch]:
+                   batch_marks: list[int], kids=None) -> list[Batch]:
     """Split an op list into batches at the given boundaries, assigning
-    per-batch ordinals."""
+    per-batch ordinals.  ``kids`` is the owning simulator's kernel-id
+    stream (None falls back to the module-global one)."""
     batches, prev = [], 0
     for end in batch_marks + [len(ops)]:
         if end <= prev:
             continue
-        tasks = [KernelTask(op.name, op.work(), client_id=client_id,
-                            queue_id=queue_id, ordinal=i)
-                 for i, op in enumerate(ops[prev:end])]
+        tasks = []
+        for i, op in enumerate(ops[prev:end]):
+            extra = {} if kids is None else {"kid": next(kids)}
+            tasks.append(KernelTask(op.name, op.work(), client_id=client_id,
+                                    queue_id=queue_id, ordinal=i, **extra))
         batches.append(Batch(tasks))
         prev = end
     return batches
@@ -79,6 +82,10 @@ class Client:
         self.job_kernel_counts: list[int] = []   # kernels per issued job
         self.slice_seconds = 0.0
         self._arrivals = spec.arrivals(horizon, self.rng)
+        # Kernel-id stream: the owning simulator's, so kid assignment is a
+        # per-simulator sequence no matter how several simulators' event
+        # loops interleave (the hierarchy tiers' parity contract).
+        self.kids = None
         # Engine hook (VecSimulator): notified after every queue-state
         # mutation so the engine can maintain incremental ready/startable
         # sets instead of scanning all clients per event.  None under the
@@ -109,7 +116,8 @@ class Client:
             marks = [i for i, op in enumerate(ops)
                      if i > 0 and op.name.startswith("embed")]
         self.jobs_issued += 1
-        job = Job(_build_batches(ops, self.cid, self.cid, marks),
+        job = Job(_build_batches(ops, self.cid, self.cid, marks,
+                                 kids=self.kids),
                   arrival, jid=self.jobs_issued)
         # record the *actual* kernels of each issued job: fractional-progress
         # metrics must divide by the sim's own traces, not resample them
@@ -166,6 +174,20 @@ class Client:
         assert b.tasks[self.kernel_idx].kid == task.kid
         if self._watch is not None:
             self._watch._client_refresh(self)
+
+    def undispatched_tasks(self):
+        """Queued tasks not yet dispatched, in launch order — the queue
+        contents that travel with the client on a migration.  (Completed
+        tasks are excluded on purpose: completion records hold those very
+        objects, so they must never be mutated.)"""
+        if self.current is not None:
+            b = self.current.batches[self.batch_idx]
+            yield from b.tasks[self.kernel_idx:]
+            for nb in self.current.batches[self.batch_idx + 1:]:
+                yield from nb.tasks
+        for j in self.pending:
+            for b in j.batches:
+                yield from b.tasks
 
     def kernel_done(self, now: float) -> bool:
         """Mark the in-flight kernel complete.  Returns True if this

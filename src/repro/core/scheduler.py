@@ -97,6 +97,7 @@ class LithOSScheduler(Policy):
 
     def attach(self, sim):
         super().attach(sim)
+        self.atomizer.kids = sim.kernel_ids
         if getattr(sim, "vec", False):
             # same layout/ordering contract, bitmask free-lists; built
             # fresh from the (unchanged) quotas
@@ -257,7 +258,9 @@ class LithOSScheduler(Policy):
             unseen = any(self.governor.unseen(ek.task)
                          for ek in self.sim.in_flight.values())
             if unseen:
-                self.sim.set_frequency(1.0)
+                # full speed for the conservative-learning phase — but the
+                # cluster power manager's cap still binds
+                self.sim.set_frequency(self.governor._clamp(1.0))
                 self.governor.current_f = self.sim.freq
             else:
                 f = self.governor.maybe_switch(now)

@@ -197,6 +197,13 @@ class Simulator:
         assert len(cids) == len(apps) and len(set(cids)) == len(cids)
         self.clients = [Client(cid, a, horizon, seed=seed)
                         for cid, a in zip(cids, apps)]
+        # Per-simulator kernel-id stream: kid assignment depends only on
+        # this simulator's own event order, so interleaving several
+        # simulators (node/cluster tiers) is unobservable in the records —
+        # sequential and interleaved runs stay bit-for-bit identical.
+        self.kernel_ids = itertools.count()
+        for c in self.clients:
+            c.kids = self.kernel_ids
         if not collect_records:
             for c in self.clients:
                 c._drop_batches = True
@@ -330,6 +337,14 @@ class Simulator:
         client's pending queue), so only strictly later ones are re-seeded
         here — this simulator's own clock may still lag behind."""
         assert client.cid not in self.client_by_id
+        # Re-key the client into this simulator's kernel-id stream: its
+        # undispatched queue still carries source-simulator kids, which
+        # could collide with ids already dealt here (in_flight and the
+        # SliceMap are kid-keyed).  Dispatched tasks are left alone —
+        # their completion records live in the source simulator.
+        client.kids = self.kernel_ids
+        for task in client.undispatched_tasks():
+            task.kid = next(self.kernel_ids)
         self.clients.append(client)
         self.client_by_id[client.cid] = client
         gen = self._arr_gen.get(client.cid, 0)

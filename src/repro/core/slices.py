@@ -552,19 +552,20 @@ class VecSliceMap:
 
 
 # ---------------------------------------------------------------------------
-# Node-level lending ledger (cross-device TPC stealing)
+# Member-level lending ledger (cross-member stealing, any hierarchy tier)
 # ---------------------------------------------------------------------------
 
 @dataclass
-class NodeLendRecord:
-    """One client queue hosted away from its home device.
+class MemberLendRecord:
+    """One client queue hosted away from its home member.
 
-    The node-scale mirror of :class:`LendRecord`: instead of one slice lent
-    across an ownership boundary for one kernel, this is one *device's worth
-    of stealable capacity* lent across a device boundary for one migration
-    interval.  ``home`` is the device the router placed the client on (the
-    saturated borrower of help); ``host`` is the idle device donating its
-    capacity by hosting the queue."""
+    The hierarchy-scale mirror of :class:`LendRecord`: instead of one slice
+    lent across an ownership boundary for one kernel, this is one *member's
+    worth of stealable capacity* lent across a member boundary for one
+    migration interval — a device boundary for the node tier, a node
+    boundary for the cluster tier.  ``home`` is the member the router placed
+    the client on (the saturated borrower of help); ``host`` is the idle
+    member donating its capacity by hosting the queue."""
 
     cid: int
     home: int
@@ -581,27 +582,37 @@ class NodeLendRecord:
         return 0.0 if self.t_end is None else self.t_end - self.t_start
 
 
-class NodeLedger:
-    """Cross-device donation bookkeeping for the NodeCoordinator.
+class MemberLedger:
+    """Cross-member donation bookkeeping for one hierarchy tier's
+    coordinator (devices of a node; nodes of a cluster).
 
-    Tracks each client's home (router placement) and current device, records
-    a :class:`NodeLendRecord` per away interval, and extends the SliceMap
-    conservation story across the node: at any instant every client is
-    hosted by exactly one device, and the open records are exactly the
-    clients hosted off their home device."""
+    Tracks each client's home (router placement) and current member, records
+    a :class:`MemberLendRecord` per away interval, and extends the SliceMap
+    conservation story across the tier: at any instant every client is
+    hosted by exactly one member, and the open records are exactly the
+    clients hosted off their home member.
 
-    def __init__(self, n_devices: int, placement: Sequence[int]):
-        self.n_devices = n_devices
-        self.home: dict[int, int] = dict(enumerate(placement))
-        self.current: dict[int, int] = dict(enumerate(placement))
-        self.ledger: list[NodeLendRecord] = []
-        self._open: dict[int, NodeLendRecord] = {}
+    ``placement`` maps cid -> member: either a dict, or a sequence indexed
+    by cid (the node tier's app-ordered placement list)."""
+
+    def __init__(self, n_members: int, placement):
+        self.n_members = n_members
+        base = (dict(placement) if isinstance(placement, dict)
+                else dict(enumerate(placement)))
+        self.home: dict[int, int] = dict(base)
+        self.current: dict[int, int] = dict(base)
+        self.ledger: list[MemberLendRecord] = []
+        self._open: dict[int, MemberLendRecord] = {}
         self.lent_client_seconds = 0.0  # closed away-intervals, from ledger
         self.n_migrations = 0
 
+    @property
+    def n_devices(self) -> int:     # node-tier alias
+        return self.n_members
+
     def migrate(self, cid: int, dst: int, now: float):
-        """Record that ``cid``'s launch queue moved to device ``dst``."""
-        assert 0 <= dst < self.n_devices
+        """Record that ``cid``'s launch queue moved to member ``dst``."""
+        assert 0 <= dst < self.n_members
         src = self.current[cid]
         assert dst != src, (cid, dst)
         rec = self._open.pop(cid, None)
@@ -610,11 +621,32 @@ class NodeLedger:
             rec.t_end = now
             self.lent_client_seconds += rec.duration
         if dst != self.home[cid]:
-            nr = NodeLendRecord(cid, self.home[cid], dst, now)
+            nr = MemberLendRecord(cid, self.home[cid], dst, now)
             self.ledger.append(nr)
             self._open[cid] = nr
         self.current[cid] = dst
         self.n_migrations += 1
+
+    def drop(self, cid: int, now: float):
+        """Forget ``cid`` — a higher tier migrated it out of this tier's
+        scope.  Any open away-interval is closed (the donation ended when
+        the client left the tier)."""
+        rec = self._open.pop(cid, None)
+        if rec is not None:
+            assert now >= rec.t_start, (cid, now, rec.t_start)
+            rec.t_end = now
+            self.lent_client_seconds += rec.duration
+        del self.current[cid]
+        del self.home[cid]
+
+    def adopt(self, cid: int, member: int):
+        """Register ``cid`` as newly hosted in this tier's scope — a higher
+        tier migrated it in.  The landing member becomes its home (the
+        client was freshly placed there, not lent within this tier)."""
+        assert cid not in self.current, cid
+        assert 0 <= member < self.n_members
+        self.home[cid] = member
+        self.current[cid] = member
 
     def donated_seconds(self, now: float) -> float:
         """Total away time including still-open intervals."""
@@ -622,7 +654,7 @@ class NodeLedger:
             now - r.t_start for r in self._open.values())
 
     def check(self, hosted: Optional[dict[int, int]] = None):
-        """Conservation across devices: the hosted map (cid -> device, from
+        """Conservation across members: the hosted map (cid -> member, from
         the live simulators) matches ``current``; open records are exactly
         the off-home clients; closed durations sum to the counter."""
         if hosted is not None:
@@ -636,3 +668,8 @@ class NodeLedger:
         closed = sum(r.duration for r in self.ledger if not r.open)
         assert abs(closed - self.lent_client_seconds) < 1e-9
         return True
+
+
+# Node-tier names, kept for callers that predate the hierarchy refactor.
+NodeLendRecord = MemberLendRecord
+NodeLedger = MemberLedger

@@ -74,6 +74,22 @@ class DeviceSpec:
                    launch_overhead=4e-6,
                    p_idle=0.4, p_dyn=6.3, p_static_host=40.0)
 
+    @classmethod
+    def l4_like(cls) -> "DeviceSpec":
+        """Inference-tier profile: one L4 (Ada, 58 SMs = 29 TPCs, 121
+        TFLOP/s dense fp16, 300 GB/s GDDR6, 72 W TDP).  Roughly half an
+        A100's TPC count at a quarter of the power — the asymmetric-capacity
+        member of heterogeneous nodes/clusters, where the fragmentation
+        metric starts to bite (a guarantee that fits any A100 may fit no
+        L4)."""
+        # power: ~22 W idle -> ~72 W loaded (inference-tier card)
+        return cls(n_slices=29,
+                   peak_flops=121e12 / 29,
+                   hbm_bw=300e9 / 29,
+                   occupancy=8,
+                   launch_overhead=4e-6,
+                   p_idle=0.25, p_dyn=1.7, p_static_host=15.0)
+
 
 @dataclass(frozen=True)
 class NodeSpec:
@@ -138,6 +154,77 @@ class NodeConfig:
     max_migrations: int = 0         # total cap; 0 = unbounded
     validate: bool = False          # run cross-device conservation checks
                                     # at every epoch (tests)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """A cluster: N :class:`NodeSpec`s behind one placement/power plane.
+
+    Each node runs its own :class:`~repro.core.node.NodeCoordinator` (own
+    routers, lending protocol, per-device policies); the cluster tier
+    places tenants onto nodes, optionally migrates best-effort tenants
+    between nodes, and coordinates per-device DVFS f-states under a
+    cluster-wide power cap.  A 1-node cluster is exactly equivalent to
+    evaluating the bare :class:`NodeSpec` — the parity contract the cluster
+    layer's tests enforce, one level up from the node<->device one."""
+
+    nodes: tuple[NodeSpec, ...]
+    name: str = "cluster"
+
+    def __post_init__(self):
+        assert len(self.nodes) >= 1, "a cluster needs at least one node"
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def n_devices(self) -> int:
+        return sum(n.n_devices for n in self.nodes)
+
+    @property
+    def total_slices(self) -> int:
+        return sum(n.total_slices for n in self.nodes)
+
+    @classmethod
+    def uniform(cls, n_nodes: int,
+                node: Optional[NodeSpec] = None) -> "ClusterSpec":
+        nd = node if node is not None else NodeSpec.uniform(2)
+        return cls(nodes=tuple(nd for _ in range(n_nodes)),
+                   name=f"{n_nodes}x-cluster")
+
+
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Cluster-tier knobs: the same lending-protocol field names as
+    :class:`NodeConfig` (the level-agnostic coordinator reads either), at
+    node granularity, plus the cluster power budget.
+
+    Pressure is aggregated per node (summed HP backlog, pooled free-list
+    occupancy), epochs are coarser and migrations costlier than the node
+    tier's — cross-node moves ship a replica's working state over the
+    fabric, not NVLink.  ``power_cap`` (watts; 0 = uncapped) bounds the
+    projected cluster draw: at every epoch the power manager lowers
+    per-device DVFS f-states — best-effort-only devices first, HP devices
+    never below ``power_hp_floor`` — until the projection fits the cap.
+
+    ``node_config`` is applied to every member node's own coordinator
+    (intra-node stealing composes with cluster-level migration: the frozen
+    set keeps the two tiers off the same client)."""
+
+    migration: bool = False
+    epoch: float = 0.5              # pressure sampling period, seconds
+    hp_depth_hi: int = 4            # node-aggregate HP backlog => saturated
+    free_lo: float = 0.125          # pooled idle fraction <= this => saturated
+    free_hi: float = 0.5            # pooled idle fraction >= this => lender
+    migration_cost: float = 0.25    # seconds of dispatch blackout per move
+    cooldown: float = 2.0           # per-client quiet period between moves
+    max_migrations: int = 0         # total cap; 0 = unbounded
+    validate: bool = False          # run cluster-wide conservation checks
+                                    # at every epoch (tests)
+    power_cap: float = 0.0          # cluster power budget, watts; 0 = off
+    power_hp_floor: float = 0.75    # min f-state for devices with HP work
+    node_config: Optional[NodeConfig] = None  # per-node coordinator knobs
 
 
 _kernel_ids = itertools.count()

@@ -401,3 +401,40 @@ def mean_demand(spec: AppSpec, device, n_samples: int = 5,
         for op in spec.job_trace(rng):
             tot += cost.latency(op.work(), device.n_slices)
     return tot / n_samples
+
+
+def cluster_trace_apps(cfg: ArchConfig, device, *, n_services: int,
+                       total_requests: int, target_util: float = 0.85,
+                       n_devices: int = 1, be_per_device: int = 0,
+                       be_cfg: Optional[ArchConfig] = None,
+                       be_train_batch: int = 2, be_train_seq: int = 512,
+                       quota_slices: int = 0,
+                       name_prefix: str = "svc") -> tuple[list[AppSpec], float]:
+    """Cluster-scale tenant population for the vectorized engine.
+
+    ``n_services`` identical open-loop HIGH-priority inference tenants
+    (``cfg`` fwd_infer, fusion=64 -> few kernels/request) whose aggregate
+    offered load is calibrated to ``target_util * n_devices`` device-seconds
+    per second on ``device`` — the same cost-model calibration the
+    single-device throughput bench uses, scaled to a fleet — plus
+    ``be_per_device * n_devices`` closed-loop best-effort trainers (they
+    soak leftover capacity, giving the stealing tiers something to move).
+    The horizon is sized so the services offer ``total_requests`` requests
+    in aggregate.  Returns ``(apps, horizon)``; apps are ordered services
+    first, trainers last, each with a distinct workload seed."""
+    proto = AppSpec("proto", cfg, "fwd_infer", priority=Priority.HIGH,
+                    batch=2, fusion=64, prompt_mix=((128, 1.0),))
+    demand = mean_demand(proto, device)      # device-seconds per request
+    total_rps = target_util * n_devices / demand
+    horizon = total_requests / total_rps
+    rps = total_rps / n_services
+    apps = [replace(proto, name=f"{name_prefix}{i}", rps=rps, seed=i,
+                    quota_slices=quota_slices)
+            for i in range(n_services)]
+    bcfg = be_cfg if be_cfg is not None else cfg
+    apps += [AppSpec(f"bet{j}", bcfg, "train",
+                     priority=Priority.BEST_EFFORT,
+                     train_batch=be_train_batch, train_seq=be_train_seq,
+                     seed=n_services + j)
+             for j in range(be_per_device * n_devices)]
+    return apps, horizon

@@ -1,0 +1,270 @@
+"""Cluster tier: 1-node parity with evaluate_node (the refactor's
+bit-for-bit contract, one level up), cross-node stealing with cluster-wide
+ledger conservation under both engines, heterogeneous-capacity placement
+feeding the fragmentation metric, and power capping."""
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.cluster import (CLUSTER_ROUTERS, evaluate_cluster,
+                                place_cluster)
+from repro.core.lithos import evaluate
+from repro.core.node import evaluate_node
+from repro.core.types import (ClusterConfig, ClusterSpec, DeviceSpec,
+                              NodeConfig, NodeSpec, Priority)
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+L4 = DeviceSpec.l4_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+ENGINES = ("ref", "vec")
+
+STEAL_NODE = NodeConfig(migration=True, epoch=0.1, migration_cost=0.02,
+                        cooldown=5.0, validate=True)
+STEAL_CLUSTER = ClusterConfig(migration=True, epoch=0.2,
+                              migration_cost=0.05, cooldown=5.0,
+                              hp_depth_hi=2, validate=True)
+
+
+def hp_app(rps=20.0, name="hp", cfg=OLMO, quota=0):
+    return AppSpec(name, cfg, "fwd_infer", priority=Priority.HIGH,
+                   rps=rps, prompt_mix=((128, 1.0),), batch=4, fusion=8,
+                   quota_slices=quota)
+
+
+def be_train(name="be", cfg=LLAMA):
+    return AppSpec(name, cfg, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8)
+
+
+def saturated_plus_idle_node():
+    """Everything pinned on node 0 (stale forecast), node 1 empty — the
+    canonical lender shape, one level up from the PR 2 benchmark."""
+    cluster = ClusterSpec.uniform(2, NodeSpec.uniform(2, DEV))
+    apps = [hp_app(name="hp0", rps=40.0), hp_app(name="hp1", rps=30.0),
+            be_train(name="be0"), be_train(name="be1", cfg=OLMO)]
+    placement = [(0, 0), (0, 1), (0, 0), (0, 1)]
+    return cluster, apps, placement
+
+
+# -- 1-node parity (the refactor's bit-for-bit contract, one level up) -------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("system", ["lithos", "mps"])
+def test_one_node_cluster_parity_exact(engine, system):
+    """records, energy, latencies — exact, per the acceptance criteria."""
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(), hp_app(name="hp2", rps=10.0), be_train()]
+    T.reset_kernel_ids()
+    a = evaluate_node(system, node, apps, horizon=1.5, seed=3,
+                      engine=engine)
+    T.reset_kernel_ids()
+    b = evaluate_cluster(system, ClusterSpec(nodes=(node,)), apps,
+                         horizon=1.5, seed=3, router="least_loaded",
+                         engine=engine)
+    assert a.records == b.records
+    assert a.energy == b.energy
+    assert a.busy_slice_seconds == b.busy_slice_seconds
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.name == cb.name and ca.cid == cb.cid
+        assert ca.latencies == cb.latencies
+    assert b.placement == [(0, d) for d in a.placement]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_one_node_cluster_parity_with_intra_node_stealing(engine):
+    """The member node's own lending protocol behaves identically whether
+    the node runs standalone or driven event-by-event by the cluster."""
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app(name="hp0", rps=40.0), be_train(name="be0"),
+            be_train(name="be1", cfg=OLMO)]
+    placement = [0, 0, 0]
+    T.reset_kernel_ids()
+    a = evaluate_node("lithos", node, apps, horizon=2.0, seed=7,
+                      node_config=STEAL_NODE, placement=placement,
+                      engine=engine)
+    T.reset_kernel_ids()
+    b = evaluate_cluster("lithos", ClusterSpec(nodes=(node,)), apps,
+                         horizon=2.0, seed=7,
+                         cluster_config=ClusterConfig(
+                             node_config=STEAL_NODE),
+                         placement=[(0, d) for d in placement],
+                         engine=engine)
+    assert a.records == b.records
+    assert a.energy == b.energy
+    assert a.migrations == b.per_node[0].migrations
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.latencies == cb.latencies
+
+
+def test_cluster_dispatch_through_evaluate():
+    cluster = ClusterSpec.uniform(2, NodeSpec.uniform(1, DEV))
+    res = evaluate("lithos", cluster, [hp_app(), be_train()], horizon=1.0,
+                   seed=0, router="round_robin")
+    assert res.cluster is cluster
+    assert len(res.clients) == 2
+    assert res.client("hp").n_completed > 0
+    with pytest.raises(ValueError):
+        evaluate("lithos", DEV, [hp_app()], horizon=1.0,
+                 cluster_config=ClusterConfig())
+    with pytest.raises(ValueError):
+        evaluate("lithos", cluster, [hp_app()], horizon=1.0,
+                 node_config=NodeConfig())
+
+
+# -- cross-node stealing + cluster-wide conservation -------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_cross_node_stealing_conserves(engine):
+    """The conservation property test: with cluster migration on and
+    ``validate=True`` the coordinator re-checks the cluster-wide ledger at
+    every epoch; here we also assert the final state explicitly."""
+    cluster, apps, placement = saturated_plus_idle_node()
+    T.reset_kernel_ids()
+    res = evaluate_cluster("lithos", cluster, apps, horizon=3.0, seed=7,
+                           cluster_config=STEAL_CLUSTER,
+                           placement=placement, engine=engine)
+    assert res.migrations > 0               # the idle node lent capacity
+    ledger = res.ledger
+    # every client hosted exactly once, by the node the ledger claims
+    hosted = {}
+    for ni, nc in enumerate(res.coordinator.node_coords):
+        for sim in nc.sims:
+            for c in sim.clients:
+                assert c.cid not in hosted, f"client {c.cid} hosted twice"
+                hosted[c.cid] = ni
+    assert hosted == ledger.current
+    res.coordinator.check()
+    # open records are exactly the off-home clients
+    open_recs = [r for r in ledger.ledger if r.open]
+    off_home = {cid for cid, n in ledger.current.items()
+                if n != ledger.home[cid]}
+    assert {r.cid for r in open_recs} == off_home
+    assert ledger.donated_seconds(res.horizon) > 0
+    # only BE tenants moved, and each move landed in the log
+    be_cids = {i for i, a in enumerate(apps)
+               if a.priority == Priority.BEST_EFFORT}
+    assert {cid for _, cid, _, _ in res.coordinator.migration_log} <= be_cids
+    assert len(res.coordinator.migration_log) == res.migrations
+
+
+def test_cross_node_stealing_helps_the_starved_trainers():
+    cluster, apps, placement = saturated_plus_idle_node()
+    T.reset_kernel_ids()
+    static = evaluate_cluster("lithos", cluster, apps, horizon=3.0, seed=7,
+                              placement=placement)
+    T.reset_kernel_ids()
+    steal = evaluate_cluster("lithos", cluster, apps, horizon=3.0, seed=7,
+                             cluster_config=STEAL_CLUSTER,
+                             placement=placement)
+    be_jobs = lambda r: sum(r.client(a.name).n_completed for a in apps
+                            if a.priority == Priority.BEST_EFFORT)
+    assert steal.migrations > 0
+    assert be_jobs(steal) > be_jobs(static)
+
+
+def test_two_tier_stealing_composes():
+    """Intra-node and cross-node lending run together; the frozen set keeps
+    the two coordinators off the same client, and both ledgers stay
+    conserved (validate=True re-checks each tier every epoch)."""
+    cluster, apps, placement = saturated_plus_idle_node()
+    cfg = ClusterConfig(migration=True, epoch=0.2, migration_cost=0.05,
+                        cooldown=5.0, hp_depth_hi=2, validate=True,
+                        node_config=STEAL_NODE)
+    T.reset_kernel_ids()
+    res = evaluate_cluster("lithos", cluster, apps, horizon=3.0, seed=7,
+                           cluster_config=cfg, placement=placement)
+    assert res.migrations + res.node_migrations > 0
+    res.coordinator.check()
+    for nc in res.coordinator.node_coords:
+        nc.check()
+
+
+# -- heterogeneous capacity + fragmentation ----------------------------------
+
+def test_frag_aware_placement_fits_guarantees_to_capacity():
+    """Asymmetric devices: a 40-slice guarantee fits no L4 (29 slices) —
+    frag_aware must put it on an A100 and keep small tenants from
+    stranding the big holes."""
+    cluster = ClusterSpec(nodes=(NodeSpec.uniform(2, DEV),
+                                 NodeSpec.uniform(2, L4)),
+                          name="hetero")
+    apps = [hp_app(name="big0", quota=40), hp_app(name="big1", quota=40),
+            hp_app(name="small0", quota=20), hp_app(name="small1", quota=20),
+            be_train(name="be0"), be_train(name="be1", cfg=OLMO)]
+    pl = place_cluster(cluster, apps, "frag_aware")
+    assert pl[0][0] == 0 and pl[1][0] == 0          # 40 only fits an A100
+    assert pl[0] != pl[1]                           # one big hole each
+    assert pl[4] != pl[5]                           # BE spread by count
+    for (ni, di) in pl:
+        assert 0 <= ni < cluster.n_nodes
+        assert 0 <= di < cluster.nodes[ni].n_devices
+
+
+def test_heterogeneous_cluster_runs_and_samples_fragmentation():
+    cluster = ClusterSpec(nodes=(NodeSpec.uniform(1, DEV),
+                                 NodeSpec.uniform(1, L4)),
+                          name="hetero")
+    apps = [hp_app(name="a", quota=40), hp_app(name="b", quota=20, rps=10.0),
+            be_train(name="c")]
+    T.reset_kernel_ids()
+    res = evaluate_cluster("lithos", cluster, apps, horizon=2.0, seed=1,
+                           router="frag_aware",
+                           cluster_config=ClusterConfig(epoch=0.25))
+    assert res.client("a").n_completed > 0
+    assert len(res.frag_series) >= 4        # sampled on the epoch grid
+    assert all(0.0 <= f <= 1.0 for _, f in res.frag_series)
+    assert 0.0 <= res.frag_mean <= 1.0
+
+
+def test_cluster_routers_deterministic_and_in_range():
+    cluster = ClusterSpec(nodes=(NodeSpec.uniform(2, DEV),
+                                 NodeSpec.uniform(2, L4)))
+    apps = [hp_app(name="a"), hp_app(name="b", quota=30),
+            be_train(name="c"), be_train(name="d", cfg=OLMO),
+            hp_app(name="e", rps=5.0)]
+    for router in CLUSTER_ROUTERS:
+        p1 = place_cluster(cluster, apps, router)
+        p2 = place_cluster(cluster, apps, router)
+        assert p1 == p2
+        assert len(p1) == len(apps)
+        for (ni, di) in p1:
+            assert 0 <= ni < cluster.n_nodes
+            assert 0 <= di < cluster.nodes[ni].n_devices
+    with pytest.raises(ValueError):
+        place_cluster(cluster, apps, "random")
+
+
+# -- power capping -----------------------------------------------------------
+
+def test_power_cap_reduces_energy_and_logs():
+    cluster, apps, placement = saturated_plus_idle_node()
+    T.reset_kernel_ids()
+    free = evaluate_cluster("lithos", cluster, apps, horizon=3.0, seed=7,
+                            placement=placement)
+    # half the cluster idles, so cap against the observed draw, not peak
+    cap = 0.8 * free.energy / free.horizon
+    T.reset_kernel_ids()
+    capped = evaluate_cluster("lithos", cluster, apps, horizon=3.0, seed=7,
+                              cluster_config=ClusterConfig(power_cap=cap),
+                              placement=placement)
+    assert capped.power_log                 # the manager ran every epoch
+    assert capped.energy < free.energy
+    for t, before, after, min_f in capped.power_log:
+        assert after <= max(cap, before) + 1e-6
+        assert min_f >= DEV.f_states[0] - 1e-9
+
+
+def test_power_cap_respects_hp_floor():
+    cluster, apps, placement = saturated_plus_idle_node()
+    cfg = ClusterConfig(power_cap=1.0, power_hp_floor=0.8)  # infeasible cap
+    T.reset_kernel_ids()
+    res = evaluate_cluster("lithos", cluster, apps, horizon=2.0, seed=7,
+                           cluster_config=cfg, placement=placement)
+    pm = res.coordinator.power_manager
+    # replay the last epoch's plan: HP devices never below the floor
+    from repro.core.dvfs import plan_power_budget
+    fs = plan_power_budget(pm.specs, [s.n_slices for s in pm.specs],
+                           [True] * len(pm.specs), 1.0, hp_floor=0.8)
+    assert all(f >= 0.8 - 1e-9 for f in fs)

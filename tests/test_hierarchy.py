@@ -1,0 +1,131 @@
+"""Level-agnostic hierarchy: generic routing, the fragmentation metric,
+and the cluster power-budget planner."""
+import pytest
+
+from repro.core.dvfs import plan_power_budget
+from repro.core.hierarchy import ROUTERS, fragmentation, route
+from repro.core.types import DeviceSpec, Priority
+from repro.core.workloads import AppSpec
+
+DEV = DeviceSpec.a100_like()
+
+
+def _app(name, prio=Priority.HIGH, quota=0, cfg_name="olmo-1b"):
+    from repro.configs.registry import get_config
+    return AppSpec(name, get_config(cfg_name), "fwd_infer", priority=prio,
+                   rps=5.0, prompt_mix=((128, 1.0),), batch=4, fusion=8,
+                   quota_slices=quota)
+
+
+# -- generic routing ---------------------------------------------------------
+
+def test_route_single_member_short_circuits():
+    apps = [_app("a"), _app("b")]
+    for router in ROUTERS:
+        assert route([54], apps, router) == [0, 0]
+
+
+def test_route_round_robin_stripes():
+    apps = [_app(f"a{i}") for i in range(5)]
+    assert route([54, 54, 54], apps, "round_robin") == [0, 1, 2, 0, 1]
+
+
+def test_route_least_loaded_normalizes_by_capacity():
+    """On a 2:1 capacity split, equal demands land 2:1."""
+    apps = [_app(f"a{i}") for i in range(6)]
+    pl = route([60, 30], apps, "least_loaded", demands=[1.0] * 6)
+    assert pl.count(0) == 4 and pl.count(1) == 2
+
+
+def test_route_quota_aware_respects_member_capacity():
+    """A guarantee is checked against each member's own capacity."""
+    apps = [_app("big", quota=50), _app("small", quota=20)]
+    pl = route([27, 54], apps, "quota_aware")
+    assert pl[0] == 1                       # 50 only fits on the 54 member
+
+
+def test_route_unknown_raises():
+    with pytest.raises(ValueError):
+        route([54, 54], [_app("a")], "nope")
+
+
+def test_route_demands_required():
+    with pytest.raises(AssertionError):
+        route([54, 54], [_app("a")], "least_loaded")
+
+
+# -- fragmentation metric ----------------------------------------------------
+
+def test_fragmentation_zero_when_everything_fits():
+    assert fragmentation([54, 54], [10, 20, 30]) == 0.0
+
+
+def test_fragmentation_one_when_nothing_fits():
+    assert fragmentation([5, 3], [10, 20]) == 1.0
+
+
+def test_fragmentation_degenerate_inputs():
+    assert fragmentation([], [10]) == 0.0
+    assert fragmentation([0, 0], [10]) == 0.0
+    assert fragmentation([54], []) == 0.0
+
+
+def test_fragmentation_partial():
+    # free=[10, 2]: 10 hosts both demands, 2 hosts neither ->
+    # stranded = 2 * 1.0, total = 12
+    f = fragmentation([10, 2], [5, 8])
+    assert f == pytest.approx(2.0 / 12.0)
+
+
+def test_fragmentation_weighs_by_fragment_size():
+    # the larger the stranded fragment, the worse the score
+    assert fragmentation([9, 1], [10]) == 1.0
+    assert fragmentation([20, 1], [10]) < 1.0
+
+
+# -- cluster power-budget planner -------------------------------------------
+
+def _plan(active, hp, cap, n=3, hp_floor=0.75):
+    devs = [DEV] * n
+    return plan_power_budget(devs, active, hp, cap, hp_floor=hp_floor)
+
+
+def test_power_budget_generous_cap_is_noop():
+    fs = _plan([54, 54, 54], [True, True, True], cap=1e9)
+    assert fs == [1.0, 1.0, 1.0]
+
+
+def test_power_budget_throttles_be_devices_first():
+    full = sum(DEV.power(54, 1.0) for _ in range(3))
+    # shave less than one BE device's full dynamic swing off the budget
+    fs = _plan([54, 54, 54], [True, True, False], cap=full - 100.0)
+    assert fs[0] == 1.0 and fs[1] == 1.0    # HP devices untouched
+    assert fs[2] < 1.0                      # BE device took the cut
+
+
+def test_power_budget_respects_hp_floor():
+    fs = _plan([54, 54, 54], [True, True, True], cap=0.0)
+    assert all(f >= 0.75 - 1e-9 for f in fs)
+    fs = _plan([54, 54, 54], [False, False, False], cap=0.0)
+    assert all(f == DEV.f_states[0] for f in fs)    # BE can hit the floor
+
+
+def test_power_budget_meets_feasible_cap():
+    full = sum(DEV.power(54, 1.0) for _ in range(3))
+    floor = sum(DEV.power(54, DEV.f_states[0]) for _ in range(3))
+    cap = (full + floor) / 2
+    fs = _plan([54, 54, 54], [False, False, False], cap=cap)
+    assert sum(DEV.power(54, f) for f in fs) <= cap + 1e-6
+
+
+def test_power_budget_skips_idle_devices():
+    """Throttling an idle device saves nothing; the planner must not spin
+    on it, and must leave its state at f_max."""
+    fs = _plan([0, 54, 54], [False, False, False], cap=0.0)
+    assert fs[0] == 1.0
+    assert fs[1] == fs[2] == DEV.f_states[0]
+
+
+def test_power_budget_deterministic():
+    args = ([30, 54, 12], [False, True, False], 900.0)
+    assert _plan(*args) == _plan(*args)
