@@ -1,0 +1,156 @@
+"""Control-plane benchmark: submission-to-admission latency + crash recovery.
+
+Three numbers matter for an online control plane and this bench measures
+all of them against the real daemon code paths (no mocks):
+
+* **submit -> admit latency** — wall time from the submit record hitting
+  the journal's inbox to the daemon journaling ``ADMIT``, measured per job
+  while the node is live and stepping;
+* **recovery time** — wall time for a fresh daemon incarnation to replay
+  the journal of a crashed one (jobs abandoned mid-RUNNING) and bring
+  every interrupted job back to RUNNING;
+* **replay throughput** — journal records folded per second, the term that
+  bounds recovery as the journal grows.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_control_plane.py [--smoke] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _persist import write_json                              # noqa: E402
+from repro.ctl import store                                  # noqa: E402
+from repro.ctl.daemon import ControlPlane, DaemonConfig      # noqa: E402
+from repro.ctl.state import JobState                         # noqa: E402
+from repro.ctl.store import Journal, replay                  # noqa: E402
+
+PRESETS = {
+    "full": {"n_submits": 24, "n_crash_jobs": 4, "replay_records": 20000},
+    "smoke": {"n_submits": 6, "n_crash_jobs": 2, "replay_records": 2000},
+}
+
+
+def _tick_until(cp, pred, max_wall=120.0):
+    t0 = time.time()
+    while time.time() - t0 < max_wall:
+        cp.tick()
+        if pred():
+            return
+    raise RuntimeError("daemon did not converge")
+
+
+def bench_admission(n_submits: int) -> dict:
+    """Per-job wall latency from inbox write to the journaled ADMIT."""
+    d = tempfile.mkdtemp(prefix="ctl-bench-")
+    try:
+        cp = ControlPlane(d, DaemonConfig(n_devices=2, poll_interval=0.0))
+        lats = []
+        for i in range(n_submits):
+            jid = store.request_submit(
+                d, {"kind": "serve", "rps": 10.0, "duration": 0.25,
+                    "priority": "be", "name": f"bench-{i}"})
+            t_sub = time.time()
+            _tick_until(cp, lambda: cp.jobs.get(jid) is not None
+                        and cp.jobs[jid].state not in (JobState.QUEUED,))
+            lats.append(time.time() - t_sub)
+        _tick_until(cp, lambda: all(j.terminal for j in cp.jobs.values()))
+        cp.shutdown()
+        arr = 1e3 * np.asarray(lats)
+        return {"metric": "submit_to_admit_ms", "n": len(lats),
+                "p50": round(float(np.median(arr)), 3),
+                "p95": round(float(np.percentile(arr, 95)), 3),
+                "max": round(float(arr.max()), 3)}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_recovery(n_jobs: int) -> dict:
+    """Crash with ``n_jobs`` RUNNING, then time a fresh incarnation until
+    all of them are RUNNING again (replay + requeue + re-admission)."""
+    d = tempfile.mkdtemp(prefix="ctl-bench-")
+    try:
+        for i in range(n_jobs):
+            store.request_submit(
+                d, {"kind": "serve", "rps": 10.0, "duration": 60.0,
+                    "priority": "be", "name": f"crash-{i}"})
+        cp = ControlPlane(d, DaemonConfig(n_devices=2, poll_interval=0.0))
+        _tick_until(cp, lambda: sum(
+            j.state is JobState.RUNNING for j in cp.jobs.values()) == n_jobs)
+        cp.journal.close()      # crash: no shutdown hook, jobs left RUNNING
+        del cp
+
+        t0 = time.time()
+        cp2 = ControlPlane(d, DaemonConfig(n_devices=2, poll_interval=0.0))
+        t_replay = time.time() - t0
+        assert all(j.recoveries == 1 for j in cp2.jobs.values())
+        _tick_until(cp2, lambda: sum(
+            j.state is JobState.RUNNING for j in cp2.jobs.values()) == n_jobs)
+        t_running = time.time() - t0
+        cp2.shutdown()
+        return {"metric": "crash_recovery_ms", "n_jobs": n_jobs,
+                "replay_ms": round(1e3 * t_replay, 3),
+                "all_running_ms": round(1e3 * t_running, 3)}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def bench_replay_throughput(n_records: int) -> dict:
+    """Fold rate of the journal reader (bounds recovery on long histories)."""
+    d = tempfile.mkdtemp(prefix="ctl-bench-")
+    try:
+        j = Journal(d)
+        per_job = 4                     # submit/admit/start/finish
+        for i in range(n_records // per_job):
+            jid = f"job-{i:06d}"
+            j.append(jid, store.SUBMIT, spec={"kind": "train"})
+            j.append(jid, "admit", cid=i, device=i % 2)
+            j.append(jid, "start", granted=0, admitted_sim=0.0, ends_sim=1.0)
+            j.append(jid, "finish", result={"n_completed": 1})
+        j.close()
+        t0 = time.time()
+        jobs = replay(d)
+        dt = time.time() - t0
+        n = per_job * (n_records // per_job)
+        assert len(jobs) == n_records // per_job
+        assert all(jb.state is JobState.DONE for jb in jobs.values())
+        return {"metric": "replay_throughput", "records": n,
+                "seconds": round(dt, 4),
+                "records_per_sec": round(n / dt, 1)}
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small preset for CI")
+    ap.add_argument("--json", action="store_true",
+                    help="persist BENCH_CONTROL_PLANE.json via _persist")
+    args = ap.parse_args(argv)
+    preset = PRESETS["smoke" if args.smoke else "full"]
+
+    results = [bench_admission(preset["n_submits"]),
+               bench_recovery(preset["n_crash_jobs"]),
+               bench_replay_throughput(preset["replay_records"])]
+    for r in results:
+        print(r)
+    if args.json:
+        write_json("control_plane", results,
+                   meta={"preset": "smoke" if args.smoke else "full",
+                         **preset})
+
+
+if __name__ == "__main__":
+    main()

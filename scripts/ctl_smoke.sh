@@ -1,0 +1,55 @@
+#!/usr/bin/env bash
+# Control-plane smoke: exercise the daemon's whole online story end to end
+# against a throwaway state dir — submit two jobs, watch them run, cancel
+# one, kill -9 the daemon mid-flight, restart it and verify the interrupted
+# job recovers and finishes.  Run under `timeout` from CI (the script
+# itself polls with bounded loops so a wedged daemon fails, not hangs).
+set -euo pipefail
+
+DIR=$(mktemp -d /tmp/ctl-smoke.XXXXXX)
+trap 'kill -9 $DPID 2>/dev/null || true; rm -rf "$DIR"' EXIT
+CTL="python -m repro.ctl"
+export PYTHONPATH=${PYTHONPATH:-src}
+
+state_of() { $CTL status --state-dir "$DIR" --json \
+  | python -c "import json,sys; d=json.load(sys.stdin); \
+print(next((j['state'] for j in d['jobs'] if j['job_id']=='$1'), 'absent'))"; }
+
+wait_state() {     # job_id  want  tries
+  for _ in $(seq "${3:-150}"); do
+    s=$(state_of "$1")
+    [ "$s" = "$2" ] && return 0
+    sleep 0.2
+  done
+  echo "FAIL: $1 stuck in '$s' (wanted $2)"; $CTL status --state-dir "$DIR"
+  return 1
+}
+
+echo "== submit two jobs, start the daemon =="
+JOB_A=$($CTL submit --state-dir "$DIR" --kind serve --rps 25 --duration 6 \
+        --priority hp --quota 6 --name svc-a)
+JOB_B=$($CTL submit --state-dir "$DIR" --kind train --duration 40 --name trn-b)
+$CTL daemon --state-dir "$DIR" --devices 2 & DPID=$!
+
+wait_state "$JOB_A" running
+wait_state "$JOB_B" running
+$CTL status --state-dir "$DIR"
+
+echo "== cancel one job while it runs =="
+$CTL cancel --state-dir "$DIR" "$JOB_B"
+wait_state "$JOB_B" cancelled
+
+echo "== kill -9 the daemon mid-flight =="
+kill -9 "$DPID"; wait "$DPID" 2>/dev/null || true
+[ "$(state_of "$JOB_A")" = running ] || { echo "FAIL: journal lost $JOB_A"; exit 1; }
+
+echo "== restart: recovery must resume and finish the interrupted job =="
+$CTL daemon --state-dir "$DIR" --devices 2 --exit-when-idle --max-wall 240
+wait_state "$JOB_A" done 5
+$CTL status --state-dir "$DIR"
+
+RECOVERIES=$($CTL status --state-dir "$DIR" --json \
+  | python -c "import json,sys; d=json.load(sys.stdin); \
+print(next(j['recoveries'] for j in d['jobs'] if j['job_id']=='$JOB_A'))")
+[ "$RECOVERIES" = 1 ] || { echo "FAIL: expected 1 recovery, got $RECOVERIES"; exit 1; }
+echo "ctl smoke OK (job $JOB_A recovered once, cancel honored, no loss)"

@@ -116,6 +116,23 @@ class SliceMap:
         self.owner[sid] = cid
         self._idle_own.setdefault(cid, set()).add(sid)
 
+    def disown(self, sid: int):
+        """Return an idle owned slice to the shared pool — the elastic half
+        of ownership: the control plane grants a quota at admission
+        (:meth:`assign_owner` on pool slices) and returns it when the
+        tenant exits.  A held slice cannot be disowned (blocks are
+        non-preemptible); callers retry once the holder releases."""
+        assert self.holder[sid] is None, "cannot disown a held slice"
+        old = self.owner[sid]
+        if old is None:
+            return
+        self.owner[sid] = None
+        s = self._idle_own[old]
+        s.discard(sid)
+        if not s and self.owned_by(old) == 0:
+            del self._idle_own[old]
+        self._idle_pool.add(sid)
+
     # -- queries (incremental free-lists) ------------------------------------
 
     def owners(self) -> list[int]:
@@ -359,6 +376,24 @@ class VecSliceMap:
         self._idle_own[cid] = self._idle_own.get(cid, 0) | bit
         self._own_mask[cid] = self._own_mask.get(cid, 0) | bit
         self._idle_owned_union |= bit
+        self._owners_sorted = None
+
+    def disown(self, sid: int):
+        """See :meth:`SliceMap.disown` — same elastic-release semantics on
+        the bitmask free-lists."""
+        assert self.holder[sid] is None, "cannot disown a held slice"
+        old = self.owner[sid]
+        if old is None:
+            return
+        bit = 1 << sid
+        self.owner[sid] = None
+        self._idle_own[old] &= ~bit
+        self._own_mask[old] &= ~bit
+        if not self._own_mask[old]:
+            del self._idle_own[old]
+            del self._own_mask[old]
+        self._idle_owned_union &= ~bit
+        self._idle_pool |= bit
         self._owners_sorted = None
 
     # -- queries -------------------------------------------------------------

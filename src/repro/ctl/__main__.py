@@ -1,0 +1,5 @@
+import sys
+
+from repro.ctl.cli import main
+
+sys.exit(main())

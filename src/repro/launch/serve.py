@@ -5,9 +5,17 @@ request stream and reports latency/throughput; with ``--collocated`` it
 additionally runs the LithOS simulator to show the same workload stacked
 with a best-effort tenant under each scheduling system.
 
+With ``--ctl-state-dir`` the driver does not serve locally at all: it is
+the first client of the online control plane (:mod:`repro.ctl`), and the
+invocation becomes a *job submission* — the serve deployment turns into a
+tenant (SLO class + slice quota) that the daemon admits onto a device and
+runs under multi-tenancy, survivable across daemon crashes.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
         --requests 32 --max-new 8
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b \
+        --ctl-state-dir /tmp/ctl --rps 40 --duration 5 --quota 8 --slo 0.25
 """
 from __future__ import annotations
 
@@ -17,12 +25,15 @@ import time
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.serve.engine import ServeConfig, SlotServer
 
 
 def serve(cfg, *, n_requests: int = 16, max_slots: int = 4,
           max_len: int = 128, max_new: int = 16, seed: int = 0,
           verbose: bool = True):
+    # deferred: the --ctl-state-dir submit path must not pay (or require)
+    # the jax import just to drop a spec file in the daemon's inbox
+    from repro.serve.engine import ServeConfig, SlotServer
+
     rng = np.random.default_rng(seed)
     t0 = time.time()
     srv = SlotServer(cfg, serve_cfg=ServeConfig(
@@ -43,6 +54,21 @@ def serve(cfg, *, n_requests: int = 16, max_slots: int = 4,
     return done, lats
 
 
+def submit_to_ctl(args) -> str:
+    """Express this serve deployment as a control-plane job: an open-loop
+    ``serve`` tenant with the CLI's SLO class and slice quota.  Returns the
+    job id; the daemon owning ``--ctl-state-dir`` admits and runs it."""
+    from repro.ctl import store
+
+    spec = {"kind": "serve", "arch": args.arch, "reduced": args.reduced,
+            "name": args.name or f"serve-{args.arch}",
+            "priority": args.priority, "quota_slices": args.quota,
+            "rps": args.rps, "duration": args.duration,
+            "slo_latency": args.slo, "batch": args.max_slots,
+            "decode_tokens": args.max_new, "seed": args.seed}
+    return store.request_submit(args.ctl_state_dir, spec)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="olmo-1b")
@@ -52,7 +78,23 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ctl = ap.add_argument_group("control plane (submit instead of serving)")
+    ctl.add_argument("--ctl-state-dir", default=None,
+                     help="submit this deployment as a ctl job instead of "
+                          "serving locally")
+    ctl.add_argument("--name", default=None)
+    ctl.add_argument("--priority", default="hp", choices=["hp", "be"])
+    ctl.add_argument("--quota", type=int, default=0,
+                     help="pinned TPC slices for the tenant")
+    ctl.add_argument("--rps", type=float, default=20.0)
+    ctl.add_argument("--duration", type=float, default=5.0,
+                     help="serve window, simulated seconds")
+    ctl.add_argument("--slo", type=float, default=0.25,
+                     help="SLO latency target, seconds")
     args = ap.parse_args(argv)
+    if args.ctl_state_dir is not None:
+        print(submit_to_ctl(args))
+        return
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()

@@ -52,15 +52,18 @@ class SlotServer:
     """Continuous-batching server for decoder-only configs."""
 
     def __init__(self, cfg: ArchConfig, params: Optional[PyTree] = None, *,
-                 serve_cfg: ServeConfig = ServeConfig(), seed: int = 0,
+                 serve_cfg: Optional[ServeConfig] = None, seed: int = 0,
                  clock: Optional[Callable[[], float]] = None):
         assert not cfg.is_encoder_decoder, "SlotServer serves decoder LMs"
         self.cfg = cfg
-        self.sc = serve_cfg
+        # a ServeConfig() default argument would be evaluated once and
+        # shared by every server — mutating one server's sc (e.g. tuning
+        # max_new_tokens) would silently retune all of them
+        self.sc = serve_cfg if serve_cfg is not None else ServeConfig()
         self.params = (params if params is not None
                        else init_model(cfg, jax.random.PRNGKey(seed)))
         self.clock = clock or (lambda: 0.0)
-        B, L = serve_cfg.max_slots, serve_cfg.max_len
+        B, L = self.sc.max_slots, self.sc.max_len
         self.caches = transformer.init_caches(cfg, B, L)
         self.pos = np.zeros(B, np.int64)            # next position per slot
         self.budget = np.zeros(B, np.int64)         # tokens left per slot

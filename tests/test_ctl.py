@@ -1,0 +1,346 @@
+"""Control-plane tests: state machine, journal, daemon lifecycle, recovery.
+
+The crash test is the one the subsystem exists for: ``kill -9`` the daemon
+mid-run, restart it against the same ``--state-dir``, and every job the
+crash interrupted resumes — none lost, none duplicated.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.ctl import store
+from repro.ctl.daemon import ControlPlane, DaemonConfig, app_from_spec, JobSpecError
+from repro.ctl.state import (TERMINAL, TRANSITIONS, InvalidTransition, Job,
+                             JobEvent, JobState, transition)
+
+pytestmark = pytest.mark.ctl
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+def test_transitions_exhaustive():
+    """Every (state, event) pair either transitions or raises the typed
+    InvalidTransition — no pair falls through to anything else."""
+    for state in JobState:
+        for event in JobEvent:
+            if (state, event) in TRANSITIONS:
+                nxt = transition(state, event)
+                assert isinstance(nxt, JobState)
+            else:
+                with pytest.raises(InvalidTransition) as ei:
+                    transition(state, event)
+                assert ei.value.state is state
+                assert ei.value.event is event
+
+
+def test_terminal_states_absorbing():
+    for state in TERMINAL:
+        rows = [e for (s, e) in TRANSITIONS if s is state]
+        assert rows == [], f"{state} must have no outgoing transitions"
+
+
+def test_every_state_reaches_terminal():
+    """No parking state the machine can never leave: from every state some
+    event path ends in a terminal state."""
+    reaches = set(TERMINAL)
+    changed = True
+    while changed:
+        changed = False
+        for (s, _), dst in TRANSITIONS.items():
+            if dst in reaches and s not in reaches:
+                reaches.add(s)
+                changed = True
+    assert reaches == set(JobState)
+
+
+def test_lifecycle_happy_path():
+    job = Job(job_id="j", spec={})
+    for ev, want in [(JobEvent.ADMIT, JobState.ADMITTED),
+                     (JobEvent.START, JobState.RUNNING),
+                     (JobEvent.MIGRATE, JobState.MIGRATING),
+                     (JobEvent.LAND, JobState.RUNNING),
+                     (JobEvent.FINISH, JobState.DONE)]:
+        assert job.apply(ev) is want
+    assert job.terminal and job.migrations == 1
+    with pytest.raises(InvalidTransition):
+        job.apply(JobEvent.CANCEL)
+
+
+def test_requeue_resets_data_plane_bindings():
+    job = Job(job_id="j", spec={})
+    job.apply(JobEvent.ADMIT)
+    job.cid, job.device, job.granted_slices = 7, 1, 8
+    job.apply(JobEvent.START)
+    job.apply(JobEvent.PREEMPT)
+    job.apply(JobEvent.REQUEUE)
+    assert job.state is JobState.QUEUED
+    assert job.cid is None and job.device is None
+    assert job.granted_slices == 0 and job.recoveries == 1
+
+
+# ---------------------------------------------------------------------------
+# journal + spool
+# ---------------------------------------------------------------------------
+
+def test_journal_replay_round_trip(tmp_path):
+    d = str(tmp_path)
+    j = store.Journal(d)
+    j.append("a", store.SUBMIT, spec={"kind": "train"})
+    j.append("a", "admit", cid=0, device=1)
+    j.append("a", "start", granted=4, admitted_sim=0.0, ends_sim=2.0)
+    j.append("a", "finish", result={"n_completed": 10})
+    j.append("b", store.SUBMIT, spec={"kind": "serve"})
+    j.append("b", "admit", cid=1, device=0)
+    j.append("b", "start", granted=0, admitted_sim=0.0, ends_sim=1.0)
+    j.close()
+    jobs = store.replay(d)
+    assert jobs["a"].state is JobState.DONE
+    assert jobs["a"].result == {"n_completed": 10}
+    assert jobs["a"].granted_slices == 4 and jobs["a"].device == 1
+    assert jobs["b"].state is JobState.RUNNING and jobs["b"].cid == 1
+
+
+def test_journal_torn_tail_ignored(tmp_path):
+    d = str(tmp_path)
+    j = store.Journal(d)
+    j.append("a", store.SUBMIT, spec={})
+    j.append("a", "admit", cid=0, device=0)
+    j.close()
+    with open(os.path.join(d, store.JOURNAL), "a") as f:
+        f.write('{"seq": 2, "job": "a", "eve')      # crash mid-write
+    jobs = store.replay(d)
+    assert jobs["a"].state is JobState.ADMITTED
+    # a new Journal appends after the torn line without corruption
+    store.Journal(d).append("a", "start", granted=0,
+                            admitted_sim=0.0, ends_sim=1.0)
+    assert store.replay(d)["a"].state is JobState.ADMITTED  # torn line ends parse
+    # torn tail only masks records *after* it; the journal before it holds
+
+
+def test_duplicate_submit_ignored(tmp_path):
+    d = str(tmp_path)
+    j = store.Journal(d)
+    j.append("a", store.SUBMIT, spec={"name": "first"})
+    j.append("a", store.SUBMIT, spec={"name": "dup"})
+    j.close()
+    jobs = store.replay(d)
+    assert len(jobs) == 1 and jobs["a"].spec == {"name": "first"}
+
+
+def test_spool_order_and_consume(tmp_path):
+    d = str(tmp_path)
+    ids = [store.request_submit(d, {"i": i}) for i in range(3)]
+    store.request_cancel(d, ids[1])
+    submits, cancels, drain = store.scan_inbox(d)
+    assert [s["job_id"] for s in submits] == ids       # arrival order
+    assert cancels[0]["job_id"] == ids[1] and not drain
+    for e in submits + cancels:
+        store.consume(e)
+    assert store.scan_inbox(d) == ([], [], False)
+    store.request_drain(d)
+    assert store.scan_inbox(d)[2] is True
+
+
+# ---------------------------------------------------------------------------
+# spec -> tenant
+# ---------------------------------------------------------------------------
+
+def test_app_from_spec_serve_maps_to_llm_infer():
+    app, dur = app_from_spec({"kind": "serve", "rps": 25.0, "duration": 3.0,
+                              "priority": "hp", "quota_slices": 6,
+                              "slo_latency": 0.2}, fallback_name="x")
+    assert app.kind == "llm_infer" and app.rps == 25.0
+    assert app.quota_slices == 6 and dur == 3.0
+
+
+@pytest.mark.parametrize("spec", [
+    {"kind": "nope"},
+    {"kind": "train", "arch": "not-an-arch"},
+    {"kind": "train", "duration": -1},
+    {"kind": "serve", "rps": 0.0},
+    {"kind": "train", "priority": "urgent"},
+])
+def test_app_from_spec_rejects(spec):
+    with pytest.raises(JobSpecError):
+        app_from_spec(spec, fallback_name="x")
+
+
+# ---------------------------------------------------------------------------
+# in-process daemon lifecycle
+# ---------------------------------------------------------------------------
+
+def _run_until(cp, pred, max_wall=60.0):
+    t0 = time.time()
+    while time.time() - t0 < max_wall:
+        cp.tick()
+        if pred():
+            return
+    raise AssertionError("daemon did not converge")
+
+
+@pytest.mark.parametrize("engine", ["ref", "vec"])
+def test_daemon_lifecycle(tmp_path, engine):
+    d = str(tmp_path)
+    hp = store.request_submit(d, {"kind": "serve", "rps": 30.0,
+                                  "duration": 0.6, "priority": "hp",
+                                  "quota_slices": 6})
+    be = store.request_submit(d, {"kind": "train", "duration": 0.4})
+    bad = store.request_submit(d, {"kind": "bogus"})
+    cp = ControlPlane(d, DaemonConfig(n_devices=2, engine=engine,
+                                      poll_interval=0.0))
+    _run_until(cp, lambda: all(j.terminal for j in cp.jobs.values()))
+    jobs = cp.jobs
+    assert jobs[hp].state is JobState.DONE
+    assert jobs[hp].granted_slices == 6
+    assert jobs[hp].result["n_completed"] > 0
+    assert jobs[be].state is JobState.DONE
+    assert jobs[be].result["n_completed"] > 0
+    assert jobs[bad].state is JobState.FAILED and "bogus" in jobs[bad].error
+    # the two tenants were spread across the two devices
+    assert jobs[hp].device != jobs[be].device
+    # the journal is the truth: replay reproduces the live table
+    cp.shutdown()
+    rep = store.replay(d)
+    for jid, j in jobs.items():
+        assert rep[jid].state is j.state and rep[jid].result == j.result
+    # data plane is clean: no clients, no owned slices, ledger empty
+    for sim, pol in zip(cp.coord.sims, cp.coord.policies):
+        assert not sim.client_by_id
+        sm = getattr(pol, "slices", None)
+        if sm is not None:
+            assert all(o is None for o in sm.owner)
+    assert not cp.coord.ledger.current
+
+
+def test_daemon_cancel_running_job(tmp_path):
+    d = str(tmp_path)
+    jid = store.request_submit(d, {"kind": "train", "duration": 50.0})
+    cp = ControlPlane(d, DaemonConfig(n_devices=1, poll_interval=0.0))
+    _run_until(cp, lambda: cp.jobs[jid].state is JobState.RUNNING)
+    store.request_cancel(d, jid)
+    _run_until(cp, lambda: cp.jobs[jid].terminal)
+    assert cp.jobs[jid].state is JobState.CANCELLED
+    assert cp.jobs[jid].result["n_completed"] >= 0
+    cp.shutdown()
+    assert not cp.coord.sims[0].client_by_id      # detached, not leaked
+
+
+def test_daemon_quota_admission_control(tmp_path):
+    """One 54-slice device: two 40-slice tenants cannot coexist — the
+    second waits in QUEUED until the first finishes, then runs."""
+    d = str(tmp_path)
+    a = store.request_submit(d, {"kind": "serve", "rps": 20.0,
+                                 "duration": 0.4, "priority": "hp",
+                                 "quota_slices": 40})
+    b = store.request_submit(d, {"kind": "serve", "rps": 20.0,
+                                 "duration": 0.4, "priority": "hp",
+                                 "quota_slices": 40})
+    cp = ControlPlane(d, DaemonConfig(n_devices=1, poll_interval=0.0))
+    saw_b_waiting = False
+
+    def done():
+        nonlocal saw_b_waiting
+        if (cp.jobs[a].state is JobState.RUNNING
+                and cp.jobs[b].state is JobState.QUEUED):
+            saw_b_waiting = True
+        return all(j.terminal for j in cp.jobs.values())
+
+    _run_until(cp, done)
+    assert saw_b_waiting, "admission control never made b wait"
+    assert cp.jobs[a].state is JobState.DONE
+    assert cp.jobs[b].state is JobState.DONE
+    cp.shutdown()
+
+
+def test_daemon_drain_preempts_and_recovers(tmp_path):
+    d = str(tmp_path)
+    jid = store.request_submit(d, {"kind": "train", "duration": 30.0})
+    cp = ControlPlane(d, DaemonConfig(n_devices=1, poll_interval=0.0))
+    _run_until(cp, lambda: cp.jobs[jid].state is JobState.RUNNING)
+    store.request_drain(d)
+    cp.run(max_wall=30.0)           # drains: preempts the job, then exits
+    assert cp.jobs[jid].state is JobState.PREEMPTED
+    # next incarnation resumes it
+    cp2 = ControlPlane(d, DaemonConfig(n_devices=1, poll_interval=0.0))
+    assert cp2.jobs[jid].state is JobState.QUEUED
+    assert cp2.jobs[jid].recoveries == 1
+    cp2.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# crash recovery (the acceptance criterion): kill -9, restart, no loss
+# ---------------------------------------------------------------------------
+
+def _ctl(args, **kw):
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    return subprocess.run([sys.executable, "-m", "repro.ctl", *args],
+                          env=env, capture_output=True, text=True, **kw)
+
+
+def _replay_states(d):
+    return {jid: j.state for jid, j in store.replay(d).items()}
+
+
+def test_kill9_recovery_subprocess(tmp_path):
+    d = str(tmp_path)
+    a = store.request_submit(d, {"kind": "serve", "rps": 25.0,
+                                 "duration": 6.0, "priority": "hp",
+                                 "quota_slices": 6, "name": "svc"})
+    b = store.request_submit(d, {"kind": "train", "duration": 5.0,
+                                 "name": "trn"})
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.ctl", "daemon", "--state-dir", d,
+         "--devices", "2"], env=env,
+        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            st = _replay_states(d)
+            if (st.get(a) is JobState.RUNNING
+                    and st.get(b) is JobState.RUNNING):
+                break
+            time.sleep(0.2)
+        else:
+            raise AssertionError(f"jobs never both RUNNING: {_replay_states(d)}")
+    finally:
+        proc.kill()                  # SIGKILL: no shutdown hook runs
+        proc.wait()
+    hb = store.read_heartbeat(d)
+    assert hb is not None and not hb["alive"]
+    before = _replay_states(d)
+    assert before == {a: JobState.RUNNING, b: JobState.RUNNING}
+
+    # restart against the same state dir: recovery requeues and re-runs
+    r = _ctl(["daemon", "--state-dir", d, "--devices", "2",
+              "--exit-when-idle", "--max-wall", "120"], timeout=180)
+    assert r.returncode == 0, r.stderr
+    jobs = store.replay(d)
+    assert set(jobs) == {a, b}, "no job lost, none duplicated"
+    for jid in (a, b):
+        assert jobs[jid].state is JobState.DONE, (jid, jobs[jid].public())
+        assert jobs[jid].recoveries == 1
+        assert jobs[jid].result["n_completed"] > 0
+
+
+def test_status_verb_json(tmp_path):
+    d = str(tmp_path)
+    store.request_submit(d, {"kind": "train", "duration": 0.2,
+                             "name": "tiny"})
+    r = _ctl(["daemon", "--state-dir", d, "--exit-when-idle",
+              "--max-wall", "90", "--devices", "1"], timeout=150)
+    assert r.returncode == 0, r.stderr
+    out = _ctl(["status", "--state-dir", d, "--json"], timeout=30)
+    assert out.returncode == 0, out.stderr
+    doc = json.loads(out.stdout)
+    assert doc["jobs"][0]["state"] == "done"
+    assert doc["daemon"]["alive"] is False

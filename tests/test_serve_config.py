@@ -1,0 +1,32 @@
+"""Regression: SlotServer instances must not share a ServeConfig.
+
+The constructor used to default ``serve_cfg`` to a single module-load-time
+``ServeConfig()`` instance, so tuning one server's config (e.g. raising
+``max_new_tokens`` for a canary) silently retuned every other server built
+with the default.
+"""
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.serve.engine import ServeConfig, SlotServer
+
+
+def test_slotserver_default_config_not_shared():
+    cfg = get_config("olmo-1b").reduced()
+    s1 = SlotServer(cfg)
+    s1.sc.max_new_tokens = 99
+    s1.sc.max_slots = 1
+    s2 = SlotServer(cfg)
+    assert s2.sc.max_new_tokens == ServeConfig().max_new_tokens
+    assert s2.sc.max_slots == ServeConfig().max_slots
+    assert s1.sc is not s2.sc
+
+
+def test_slotserver_explicit_config_still_honored():
+    cfg = get_config("olmo-1b").reduced()
+    sc = ServeConfig(max_slots=2, max_len=64, max_new_tokens=4)
+    srv = SlotServer(cfg, serve_cfg=sc)
+    assert srv.sc is sc
+    srv.submit(np.arange(2, 10, dtype=np.int32))
+    done = srv.run_until_drained()
+    assert len(done) == 1 and len(done[0].output) <= 4

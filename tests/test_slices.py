@@ -8,7 +8,7 @@ from repro.configs.registry import get_config
 from repro.core.lithos import make_policy
 from repro.core.scheduler import LithOSConfig
 from repro.core.simulator import Simulator
-from repro.core.slices import SliceMap
+from repro.core.slices import SliceMap, VecSliceMap
 from repro.core.types import DeviceSpec, Priority, Quota
 from repro.core.workloads import AppSpec
 
@@ -82,6 +82,47 @@ def test_pool_acquisition_is_not_a_steal():
     sm = SliceMap.from_quotas(4, {0: Quota(2)})
     assert not sm.acquire([2, 3], kid=1, borrower=0, now=0.0)
     assert sm.ledger == []
+    sm.check()
+
+
+@pytest.mark.parametrize("cls", [SliceMap, VecSliceMap])
+def test_disown_returns_grant_to_pool(cls):
+    """The elastic half of ownership: the control plane grants pool slices
+    at admission (assign_owner) and disown returns them at exit."""
+    sm = cls.from_quotas(6, {0: Quota(2)})
+    sm.assign_owner(4, 1)
+    sm.assign_owner(5, 1)
+    assert sm.owned_by(1) == 2 and sorted(sm.idle_pool()) == [2, 3]
+    sm.disown(4)
+    assert sm.owned_by(1) == 1 and 4 in sm.idle_pool()
+    sm.disown(5)
+    assert sm.owned_by(1) == 0
+    assert sorted(sm.idle_pool()) == [2, 3, 4, 5]
+    sm.check()
+
+
+@pytest.mark.parametrize("cls", [SliceMap, VecSliceMap])
+def test_disown_held_rejected_partial_grant_survives(cls):
+    sm = cls.from_quotas(4, {})
+    sm.assign_owner(0, 7)
+    sm.assign_owner(1, 7)
+    sm.acquire([0], kid=9, borrower=7, now=0.0, eta=1.0)
+    with pytest.raises(AssertionError):
+        sm.disown(0)                        # held: non-preemptible
+    sm.disown(1)                            # the idle half releases fine
+    assert sm.owned_by(7) == 1
+    sm.release(9, now=1.0)                  # owner's free-list must survive
+    sm.check()
+    sm.disown(0)
+    assert sm.owned_by(7) == 0 and sorted(sm.idle_pool()) == [0, 1, 2, 3]
+    sm.check()
+
+
+@pytest.mark.parametrize("cls", [SliceMap, VecSliceMap])
+def test_disown_pool_slice_is_noop(cls):
+    sm = cls.from_quotas(3, {0: Quota(1)})
+    sm.disown(2)
+    assert sorted(sm.idle_pool()) == [1, 2]
     sm.check()
 
 
