@@ -1,0 +1,188 @@
+"""LLM-era stacking: steady continuous-batching decode vs prefill bursts.
+
+The adversarial arm is the one "Towards Efficient and Practical GPU
+Multitasking in the Era of LLM" (PAPERS.md) says breaks kernel-granular
+multitasking: a latency-critical continuous-batching decode tenant (HP,
+per-token TBT SLO, KV cache pinned on device) stacked with best-effort
+prefill bursters (8k-token prompts, multi-ms compute-bound kernels — the
+Fig 10b HoL-blockers).  LithOS atomizes the prefill kernels and keeps the
+decode tenant's slices owned + memory-floored; the MPS-like baseline lets
+decode iterations queue behind whole prefill kernels; MIG protects decode
+but strands the partition.
+
+Reported per system and arm:
+
+* decode p99 TBT (per-iteration latency of the continuous tenant) and
+  request p95 (arrival -> last token);
+* prefill throughput vs running alone (fractional-progress counting);
+* aggregate normalized throughput (mean of decode requests/s and BE
+  throughput, each vs solo) — the "at equal-or-better throughput" check;
+* KV-pressure occupancy: the decode tenant's peak KV bytes over device
+  HBM.
+
+Usage::
+
+    python benchmarks/bench_llm_stacking.py [--smoke] [--json]
+        [--min-events-per-sec N]
+
+``--smoke`` is the CI preset (short horizon, one arm); the full run is
+committed as BENCH_LLM_STACKING.json.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+from dataclasses import replace
+
+import numpy as np
+
+if __package__ in (None, ""):               # direct invocation
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+from benchmarks.scenarios import DEV, calibrated, fmt_csv, frac_throughput
+from repro.configs.registry import get_config
+from repro.core.lithos import evaluate, run_alone
+from repro.core.types import Priority
+from repro.core.workloads import AppSpec
+
+SYSTEMS = ["lithos", "mps", "mig"]
+
+
+def decode_tenant(target_util: float = 0.25) -> AppSpec:
+    """Steady continuous-batching serving: short prompts, per-token SLO."""
+    app = AppSpec("decode", get_config("llama3-8b"), "llm_continuous",
+                  priority=Priority.HIGH,
+                  quota_slices=DEV.n_slices // 2,
+                  max_batch=8, decode_tokens=12, fusion=8,
+                  prompt_mix=((512, 0.7), (2048, 0.3)), seed=3)
+    return calibrated(app, target_util, slo_mult=6.0)
+
+
+def prefill_bursters() -> list[AppSpec]:
+    """Closed-loop BE prefill: 8k-token prompts at batch 4, fusion 16 —
+    sustained multi-ms compute kernels (two streams, like a bulk
+    summarization/embedding backfill)."""
+    base = AppSpec("prefill", get_config("qwen2-moe-a2.7b"), "llm_prefill",
+                   priority=Priority.BEST_EFFORT, quota_slices=0, rps=0.0,
+                   batch=4, fusion=16, prompt_mix=((8192, 1.0),), seed=41)
+    return [base, replace(base, name="prefill2", seed=97)]
+
+
+def be_trainer() -> AppSpec:
+    return AppSpec("train", get_config("llama3-8b"), "train",
+                   priority=Priority.BEST_EFFORT, train_batch=2,
+                   train_seq=2048, fusion=10, seed=55)
+
+
+def arms(quick: bool) -> dict[str, list[AppSpec]]:
+    cont = decode_tenant()
+    out = {"adversarial": [cont] + prefill_bursters()}
+    if not quick:
+        out["steady"] = [cont, be_trainer()]
+    return out
+
+
+def _cont_stats(res, horizon: float):
+    c = res.client("decode")
+    tbt = c.latencies
+    req = c.req_latencies or []
+    kv_frac = c.kv_peak_bytes / (DEV.hbm_capacity * DEV.n_slices)
+    return {
+        "tbt_p50_ms": float(np.percentile(tbt, 50)) * 1e3 if tbt else 0.0,
+        "tbt_p99_ms": float(np.percentile(tbt, 99)) * 1e3 if tbt else 0.0,
+        "req_p95_ms": float(np.percentile(req, 95)) * 1e3 if req else 0.0,
+        "req_per_s": len(req) / horizon,
+        "kv_occupancy": kv_frac,
+    }
+
+
+def run(quick: bool = False, json_out: bool = False,
+        min_events_per_sec: float = 0.0) -> list[str]:
+    horizon = 2.0 if quick else 10.0
+    seed = 11
+    rows = [fmt_csv("bench", "arm", "system", "metric", "value", "unit")]
+    results = []
+    total_events = 0
+    t0 = time.perf_counter()
+    for arm, apps in arms(quick).items():
+        cont = apps[0]
+        # solo normalization baselines
+        solo_cont = run_alone(DEV, cont, horizon=horizon, seed=seed)
+        solo_req = max(_cont_stats(solo_cont, horizon)["req_per_s"], 1e-9)
+        be_names = [a.name for a in apps[1:]]
+        solo_be = {}
+        for a in apps[1:]:
+            r = run_alone(DEV, a, horizon=horizon, seed=seed)
+            solo_be[a.name] = max(frac_throughput(r, a.name, horizon), 1e-9)
+        for system in SYSTEMS:
+            res = evaluate(system, DEV, apps, horizon=horizon, seed=seed)
+            total_events += len(res.records)
+            s = _cont_stats(res, horizon)
+            be_thr = float(np.mean(
+                [frac_throughput(res, n, horizon) / solo_be[n]
+                 for n in be_names]))
+            decode_thr = s["req_per_s"] / solo_req
+            agg_thr = (decode_thr + be_thr) / 2.0
+            row = dict(arm=arm, system=system, **s,
+                       decode_thr_vs_alone=decode_thr,
+                       be_thr_vs_alone=be_thr,
+                       agg_thr_vs_alone=agg_thr)
+            results.append(row)
+            for k, unit in (("tbt_p50_ms", "ms"), ("tbt_p99_ms", "ms"),
+                            ("req_p95_ms", "ms"), ("kv_occupancy", "frac"),
+                            ("decode_thr_vs_alone", "x"),
+                            ("be_thr_vs_alone", "x"),
+                            ("agg_thr_vs_alone", "x")):
+                rows.append(fmt_csv("llm_stacking", arm, system, k,
+                                    f"{row[k]:.4f}", unit))
+    wall = time.perf_counter() - t0
+    ev_per_sec = total_events / max(wall, 1e-9)
+    rows.append(fmt_csv("llm_stacking", "all", "all", "events_per_sec",
+                        f"{ev_per_sec:.0f}", "1/s"))
+
+    # derived headline ratios (adversarial arm)
+    by = {(r["arm"], r["system"]): r for r in results}
+    adv_l, adv_m = by[("adversarial", "lithos")], by[("adversarial", "mps")]
+    tbt_ratio = adv_m["tbt_p99_ms"] / max(adv_l["tbt_p99_ms"], 1e-9)
+    rows.append(fmt_csv("llm_stacking", "adversarial", "derived",
+                        "mps_p99_tbt_over_lithos", f"{tbt_ratio:.2f}",
+                        "x  (claim: >= 2x)"))
+    thr_delta = adv_l["agg_thr_vs_alone"] - adv_m["agg_thr_vs_alone"]
+    rows.append(fmt_csv("llm_stacking", "adversarial", "derived",
+                        "lithos_agg_thr_minus_mps", f"{thr_delta:+.4f}",
+                        "x  (claim: >= 0)"))
+    for r in rows:
+        print(r)
+    if json_out:
+        from benchmarks._persist import write_json
+        write_json("llm_stacking", results,
+                   {"horizon_s": horizon, "quick": quick, "seed": seed,
+                    "systems": SYSTEMS,
+                    "events_per_sec": ev_per_sec,
+                    "mps_p99_tbt_over_lithos": tbt_ratio,
+                    "lithos_agg_thr_minus_mps": thr_delta})
+    if min_events_per_sec and ev_per_sec < min_events_per_sec:
+        print(f"FAIL: {ev_per_sec:.0f} events/sec < floor "
+              f"{min_events_per_sec:.0f}", file=sys.stderr)
+        sys.exit(1)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: short horizon, adversarial arm only")
+    ap.add_argument("--json", action="store_true",
+                    help="persist BENCH_LLM_STACKING.json via _persist")
+    ap.add_argument("--min-events-per-sec", type=float, default=0.0)
+    args = ap.parse_args(argv)
+    run(quick=args.smoke, json_out=args.json,
+        min_events_per_sec=args.min_events_per_sec)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,26 +27,39 @@ def be_train(name="be"):
                    train_batch=2, train_seq=2048, fusion=8)
 
 
+def cont_app(name="cont", rps=40.0):
+    return AppSpec(name, OLMO, "llm_continuous", priority=Priority.HIGH,
+                   rps=rps, max_batch=4, decode_tokens=8, fusion=8,
+                   prompt_mix=((256, 0.7), (1024, 0.3)), seed=5)
+
+
 def rec_sig(res):
     return [(r.task.kid, r.task.queue_id, r.task.ordinal, r.t_submit,
              r.t_start, r.t_end, r.slices, r.freq) for r in res.records]
 
 
-def run(system, engine, horizon, cfg=None):
+def run(system, engine, horizon, cfg=None, apps=None):
     T.reset_kernel_ids()
-    return evaluate(system, DEV, [hp_app(), be_train()], horizon=horizon,
-                    seed=0, engine=engine, lithos_config=cfg)
+    return evaluate(system, DEV, apps or [hp_app(), be_train()],
+                    horizon=horizon, seed=0, engine=engine,
+                    lithos_config=cfg)
 
 
 def main():
     horizon = float(sys.argv[1]) if len(sys.argv) > 1 else 2.0
-    configs = {s: None for s in SYSTEMS}
-    configs["lithos-full"] = LithOSConfig(rightsize=True, dvfs=True)
+    configs = {s: (None, None) for s in SYSTEMS}
+    configs["lithos-full"] = (LithOSConfig(rightsize=True, dvfs=True), None)
+    # continuous-batching serving: dynamic per-iteration batch composition
+    llm_apps = [cont_app(), be_train()]
+    configs["lithos-llm"] = (None, llm_apps)
+    configs["mps-llm"] = (None, llm_apps)
+    configs["lithos-full-llm"] = (LithOSConfig(rightsize=True, dvfs=True),
+                                  llm_apps)
     failures = 0
-    for label, cfg in configs.items():
-        system = "lithos" if label.startswith("lithos") else label
-        a = run(system, "ref", horizon, cfg)
-        b = run(system, "vec", horizon, cfg)
+    for label, (cfg, apps) in configs.items():
+        system = label.split("-")[0]
+        a = run(system, "ref", horizon, cfg, apps)
+        b = run(system, "vec", horizon, cfg, apps)
         ok = True
         msgs = []
         if rec_sig(a) != rec_sig(b):
@@ -73,6 +86,11 @@ def main():
                 ok = False
                 msgs.append(f"{ca.name} latencies differ "
                             f"({len(ca.latencies)} vs {len(cb.latencies)})")
+            if ca.req_latencies != cb.req_latencies:
+                ok = False
+                msgs.append(f"{ca.name} req_latencies differ "
+                            f"({len(ca.req_latencies or [])} vs "
+                            f"{len(cb.req_latencies or [])})")
         print(f"{'OK ' if ok else 'FAIL'} {label:14s} "
               f"records={len(a.records)}")
         for m in msgs:

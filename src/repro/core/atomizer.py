@@ -64,6 +64,11 @@ class KernelAtomizer:
         launch per atom and nothing else — a beyond-paper improvement over
         the GPU Prelude's early-exit traffic (DESIGN.md §2)."""
         c = self.cfg
+        if task.phase == "decode":
+            # decode steps are memory-bound and already sub-quantum (one
+            # token per sync) — atomizing them only adds launch overhead
+            # on the latency-critical path.  Prefill atomizes like training.
+            return 1
         if predicted_latency is None:
             if not unseen_conservative:
                 return 1

@@ -87,13 +87,14 @@ class NodeMember(Member):
     # -- pressure / placement ----------------------------------------------
 
     def pressure(self) -> Pressure:
-        hp_depth = active = free = 0
+        hp_depth = active = free = decode_depth = 0
         for m in self.coord.members:
             p = m.pressure()
             hp_depth += p.hp_depth
             active += p.active
+            decode_depth += p.decode_depth
             free += m._free()
-        return Pressure(hp_depth, free / self.capacity, active)
+        return Pressure(hp_depth, free / self.capacity, active, decode_depth)
 
     def free_snapshot(self) -> list[int]:
         return [f for m in self.coord.members for f in m.free_snapshot()]

@@ -176,7 +176,7 @@ class VecSimulator(Simulator):
                 self._ready_in.discard(cid)
                 del self._ready_pos[bisect_left(self._ready_pos, pk)]
                 del self._ready_pri[bisect_left(self._ready_pri, rk)]
-        if c.current is None and (c.pending or c.closed_loop):
+        if c._startable_now():
             self._startable.add(cid)
         else:
             self._startable.discard(cid)
@@ -562,9 +562,7 @@ class VecSimulator(Simulator):
             c = self.client_by_id.get(cid)
             if c is None or gen != self._arr_gen.get(cid, 0):
                 return True                 # migrated away: stale arrival
-            if c.spec.kind != "train":
-                c.pending.append(c.make_job(self.now))
-            c.start_next_job(self.now)
+            c.on_arrival(self.now)
         elif kind == "complete":
             kid, gen = payload
             ek = self.in_flight.get(kid)

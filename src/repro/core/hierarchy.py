@@ -57,6 +57,12 @@ class Pressure:
     hp_depth: int                   # HP jobs pending or in progress
     free_frac: float                # free-list occupancy (idle fraction)
     active: int                     # clients with work
+    # Latency-critical decode backlog (HP serving tenants: waiting
+    # requests + the in-flight iteration).  Counted *on top of* hp_depth,
+    # so decode pressure weighs double in the saturation threshold —
+    # a token behind in a decode queue is user-visible TBT, not just
+    # queueing.  0 for every pre-LLM workload (legacy behavior intact).
+    decode_depth: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -350,12 +356,13 @@ class HierarchyCoordinator:
 
     def _saturated(self, p: Pressure) -> bool:
         cfg = self.config
-        return (p.hp_depth >= cfg.hp_depth_hi
+        return (p.hp_depth + p.decode_depth >= cfg.hp_depth_hi
                 or (p.free_frac <= cfg.free_lo and p.active >= 2))
 
     def _lender(self, p: Pressure) -> bool:
         cfg = self.config
-        return p.hp_depth == 0 and p.free_frac >= cfg.free_hi
+        return (p.hp_depth == 0 and p.decode_depth == 0
+                and p.free_frac >= cfg.free_hi)
 
     # -- migration decisions -------------------------------------------------
 

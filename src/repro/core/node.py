@@ -141,15 +141,27 @@ class SimMember(Member):
         sim = self.sim
         hp_depth = 0
         active = 0
+        decode_depth = 0
         for c in sim.clients:
+            cbs = c.cbs
             busy = (c.current is not None or bool(c.pending)
-                    or c.outstanding > 0)
+                    or c.outstanding > 0
+                    or (cbs is not None and cbs.has_work))
             if busy or c.closed_loop:
                 active += 1
             if c.priority == Priority.HIGH:
-                hp_depth += len(c.pending) + (1 if c.current is not None
-                                              else 0)
-        return Pressure(hp_depth, self._free() / sim.device.n_slices, active)
+                depth = len(c.pending) + (1 if c.current is not None else 0)
+                hp_depth += depth
+                # decode HP backlog is latency-critical (per-token TBT):
+                # continuous tenants' waiting requests + in-flight
+                # iteration, and disaggregated-decode tenants' queues
+                if cbs is not None:
+                    decode_depth += len(cbs.waiting) + (
+                        1 if c.current is not None else 0)
+                elif c.spec.kind == "llm_decode":
+                    decode_depth += depth
+        return Pressure(hp_depth, self._free() / sim.device.n_slices, active,
+                        decode_depth)
 
     def free_snapshot(self) -> list[int]:
         return [self._free()]

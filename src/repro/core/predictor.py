@@ -70,6 +70,16 @@ class LatencyPredictor:
             div *= n          # approx: atoms are ~equal slices of the kernel
         self.nodes[task.key()].observe(rec.slices, rec.freq, div)
 
+    def seed_node(self, queue_id: int, ordinal: int, slices: int, f: float,
+                  latency: float):
+        """Warm-start one operator node with a synthetic observation (e.g.
+        a roofline-calibrated decode latency) so a serving tenant's first
+        iterations aren't scheduled under the conservative unseen-kernel
+        default.  ``latency`` is a whole-launch latency; the launch
+        overhead is stripped exactly as observe() does."""
+        self.nodes[(queue_id, ordinal)].observe(
+            slices, f, max(latency - self.overhead, 1e-9))
+
     # -- queries ------------------------------------------------------------
 
     def known(self, task: KernelTask) -> bool:

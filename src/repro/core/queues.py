@@ -25,7 +25,10 @@ from typing import Optional
 import numpy as np
 
 from repro.core.types import KernelTask, Priority
-from repro.core.workloads import AppSpec, OpDesc
+from repro.core.workloads import (AppSpec, ContinuousBatchState, OpDesc,
+                                  bucket_kv, continuous_decode_trace,
+                                  continuous_prefill_trace,
+                                  sample_prompt_len)
 
 
 @dataclass
@@ -57,7 +60,8 @@ def _build_batches(ops: list[OpDesc], client_id: int, queue_id: int,
         for i, op in enumerate(ops[prev:end]):
             extra = {} if kids is None else {"kid": next(kids)}
             tasks.append(KernelTask(op.name, op.work(), client_id=client_id,
-                                    queue_id=queue_id, ordinal=i, **extra))
+                                    queue_id=queue_id, ordinal=i,
+                                    phase=op.phase, **extra))
         batches.append(Batch(tasks))
         prev = end
     return batches
@@ -82,6 +86,15 @@ class Client:
         self.job_kernel_counts: list[int] = []   # kernels per issued job
         self.slice_seconds = 0.0
         self._arrivals = spec.arrivals(horizon, self.rng)
+        # Continuous batching (llm_continuous): arrivals deliver *requests*
+        # into this state machine; jobs are per-iteration batches built in
+        # start_next_job.  None for every other kind.
+        self.cbs: Optional[ContinuousBatchState] = (
+            ContinuousBatchState(spec.cfg, spec.max_batch)
+            if spec.kind == "llm_continuous" else None)
+        # Live KV-cache footprint (bytes) — the scheduler's memory-floor
+        # input (kv_floor_slices).  0 for tenants without a KV cache.
+        self.kv_bytes = 0.0
         # Kernel-id stream: the owning simulator's, so kid assignment is a
         # per-simulator sequence no matter how several simulators' event
         # loops interleave (the hierarchy tiers' parity contract).
@@ -112,7 +125,7 @@ class Client:
         # for simplicity we sync per job for train/fwd and keep LLM decode
         # steps as separate batches via marker search on the "embed" op.
         marks: list[int] = []
-        if self.spec.kind == "llm_infer":
+        if self.spec.kind in ("llm_infer", "llm_decode"):
             marks = [i for i, op in enumerate(ops)
                      if i > 0 and op.name.startswith("embed")]
         self.jobs_issued += 1
@@ -124,16 +137,74 @@ class Client:
         self.job_kernel_counts.append(job.n_kernels())
         return job
 
+    def on_arrival(self, now: float):
+        """One open-loop arrival: a *request* (continuous batching) or a
+        whole job.  This is the single arrival entry point for both
+        engines, so every stochastic draw happens here, in the client's
+        own RNG stream, in arrival order — engine interleaving and
+        prefill/decode phase splits cannot reorder the draws."""
+        if self.cbs is not None:
+            S = sample_prompt_len(self.spec.prompt_mix, self.rng)
+            n_out = max(1, int(self.rng.geometric(
+                1.0 / self.spec.decode_tokens)))
+            n_out = min(n_out, 4 * self.spec.decode_tokens)
+            self.cbs.add_request(S, n_out, now)
+        elif self.spec.kind != "train":
+            self.pending.append(self.make_job(now))
+        self.start_next_job(now)      # train: the t=0 closed-loop kick
+
+    def _make_iteration_job(self, now: float) -> Job:
+        """One continuous-batching iteration as a job: a prefill segment
+        per joining request (each its own batch — its own sync/ordinal
+        space) followed by one fused decode step over the resident batch.
+        Composition comes from ContinuousBatchState; no RNG draws here."""
+        joiners, decoders = self.cbs.begin_iteration()
+        cfg, fusion = self.spec.cfg, self.spec.fusion
+        ops: list[OpDesc] = []
+        marks: list[int] = []
+        for r in joiners:
+            if ops:
+                marks.append(len(ops))
+            ops = ops + continuous_prefill_trace(cfg, r.prompt_len, fusion)
+        if decoders:
+            if ops:
+                marks.append(len(ops))
+            mean_kv = (sum(r.kv_len for r in decoders)
+                       + len(decoders) - 1) // len(decoders)
+            ops = ops + continuous_decode_trace(cfg, len(decoders),
+                                                bucket_kv(mean_kv), fusion)
+        self.kv_bytes = self.cbs.total_kv_bytes
+        self.jobs_issued += 1
+        job = Job(_build_batches(ops, self.cid, self.cid, marks,
+                                 kids=self.kids),
+                  now, jid=self.jobs_issued)
+        self.job_kernel_counts.append(job.n_kernels())
+        return job
+
     # -- queue state ------------------------------------------------------------
 
     @property
     def closed_loop(self) -> bool:
         return self.spec.kind == "train" or self.spec.rps <= 0
 
+    def _startable_now(self) -> bool:
+        """Could start_next_job succeed right now?  The vec engine's
+        incremental startable-set predicate — must mirror start_next_job
+        exactly."""
+        if self.current is not None:
+            return False
+        if self.cbs is not None:
+            return self.cbs.has_work
+        return bool(self.pending) or self.closed_loop
+
     def start_next_job(self, now: float) -> bool:
         if self.current is not None:
             return False
-        if self.pending:
+        if self.cbs is not None:
+            if not self.cbs.has_work:
+                return False
+            self.current = self._make_iteration_job(now)
+        elif self.pending:
             self.current = self.pending.popleft()
         elif self.closed_loop:
             self.current = self.make_job(now)
@@ -207,6 +278,12 @@ class Client:
                     self.current.batches = []
                 self.current = None
                 done = True
+                if self.cbs is not None:
+                    # iteration complete: one token per resident request,
+                    # exhausted requests leave and their KV is reclaimed
+                    # (before the watch refresh — has_work must be current)
+                    self.cbs.finish_iteration(now)
+                    self.kv_bytes = self.cbs.total_kv_bytes
         if self._watch is not None:
             self._watch._client_refresh(self)
         return done
@@ -215,6 +292,14 @@ class Client:
 
     def latencies(self) -> list[float]:
         return [j.t_finish - j.arrival for j in self.completed]
+
+    def req_latencies(self) -> list[float]:
+        """Request-level latencies (arrival -> last token).  Continuous
+        tenants only; job latencies() are per-iteration (TBT) there."""
+        return list(self.cbs.req_latencies) if self.cbs is not None else []
+
+    def kv_peak_bytes(self) -> float:
+        return self.cbs.kv_peak_bytes if self.cbs is not None else 0.0
 
     def throughput(self, horizon: float) -> float:
         return len(self.completed) / horizon

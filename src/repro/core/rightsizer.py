@@ -50,6 +50,18 @@ class RightSizer:
         self.slip = slip
         self.fits: dict[tuple[int, int], ScalingFit] = {}
         self.extra_obs: dict[tuple[int, int], dict[int, float]] = {}
+        # KV-cache memory floor per client (cid -> min slices): a tenant
+        # whose KV footprint needs N slices' worth of HBM can never be
+        # right-sized below N — shrinking its compute share below its
+        # memory share would evict live cache.  Maintained by the
+        # scheduler from Client.kv_bytes; relaxes as requests complete.
+        self.memory_floor: dict[int, int] = {}
+
+    def set_memory_floor(self, cid: int, floor: int):
+        if floor > 1:
+            self.memory_floor[cid] = floor
+        else:
+            self.memory_floor.pop(cid, None)
 
     # -- learning -------------------------------------------------------------
 
@@ -121,21 +133,24 @@ class RightSizer:
         return max(1, math.ceil(task.work.n_blocks / self.occupancy))
 
     def decide(self, task: KernelTask, allocated: int) -> int:
-        """Minimal slice count within the latency-slip budget."""
+        """Minimal slice count within the latency-slip budget, clamped to
+        the owning tenant's KV-cache memory floor."""
+        floor = self.memory_floor.get(task.client_id, 1)
+        clamp = lambda t: min(allocated, max(t, floor))  # noqa: E731
         bound = self.occupancy_bound(task)
         if bound < allocated:
-            return bound
+            return clamp(bound)
         fit = self.fits.get(task.key())
         if fit is None or not fit.fitted:
             return allocated
         l_full = fit.latency(allocated)
         if l_full <= 0 or fit.m <= 0:
-            return min(allocated, bound)
+            return clamp(min(allocated, bound))
         budget = self.slip * l_full
         if budget <= fit.b:
             return allocated
         t_min = fit.m / (budget - fit.b)
-        return max(1, min(allocated, math.ceil(t_min)))
+        return clamp(max(1, math.ceil(t_min)))
 
     # -- reporting ---------------------------------------------------------------
 

@@ -33,6 +33,7 @@ from repro.core.queues import Client
 from repro.core.rightsizer import RightSizer
 from repro.core.simulator import ExecKernel, Policy
 from repro.core.slices import SliceMap, VecSliceMap
+from repro.core.workloads import kv_floor_slices
 from repro.core.types import (CompletionRecord, DeviceSpec, KernelTask,
                               Priority, Quota)
 
@@ -158,6 +159,14 @@ class LithOSScheduler(Policy):
         # quota is a GUARANTEE (enforced via slice ownership + lendability),
         # not a cap: any client may use the whole device when others idle
         desired = self.device.n_slices
+        # KV-cache memory floor: a serving tenant's live KV footprint pins
+        # a minimum slice count (its memory share) — the right-sizer must
+        # never shrink it below that, or live cache would be evicted.
+        # Refreshed per kernel; relaxes as requests complete (kv_bytes
+        # shrinks).  0 for tenants without a KV cache -> floor 1 -> no-op.
+        floor = kv_floor_slices(c.spec.cfg, self.device,
+                                getattr(c, "kv_bytes", 0.0))
+        self.rightsizer.set_memory_floor(c.cid, floor)
         pred = self.predictor.predict(task, desired)
         # right-sizing (with the occupancy filter always applied)
         if self.cfg.rightsize:
@@ -173,6 +182,9 @@ class LithOSScheduler(Policy):
                 desired = self.rightsizer.decide(task, desired)
         elif self.cfg.occupancy_filter:
             desired = min(desired, self.rightsizer.occupancy_bound(task))
+        # the memory floor binds every shrink path (decide, probe low
+        # point, occupancy filter alike)
+        desired = max(desired, min(floor, self.device.n_slices))
         # atomization; unseen BE kernels split by grid size (an unknown
         # best-effort kernel must never monopolize stolen slices)
         prio = self.quotas.get(c.cid, Quota(0)).priority

@@ -394,9 +394,7 @@ class Simulator:
             c = self.client_by_id.get(cid)
             if c is None or gen != self._arr_gen.get(cid, 0):
                 return True                 # migrated away: stale arrival
-            if c.spec.kind != "train":
-                c.pending.append(c.make_job(self.now))
-            c.start_next_job(self.now)
+            c.on_arrival(self.now)
         elif kind == "complete":
             kid, gen = payload
             ek = self.in_flight.get(kid)
@@ -445,6 +443,11 @@ class ClientMetrics:
     horizon: float = 0.0
     cid: int = -1                       # node-global client id
     kernels_per_job: float = 0.0        # mean kernels of the jobs issued
+    # Continuous-batching tenants: request-level latencies (arrival ->
+    # last token; latencies above are per-iteration TBT there) and the
+    # peak KV-cache footprint the tenant reached.
+    req_latencies: list[float] = None
+    kv_peak_bytes: float = 0.0
 
     def _lat(self, warmup: float = 0.0) -> list[float]:
         if warmup <= 0 or not self.arrivals:
@@ -499,7 +502,9 @@ class SimResult:
             cid=c.cid,
             kernels_per_job=(sum(c.job_kernel_counts)
                              / len(c.job_kernel_counts)
-                             if c.job_kernel_counts else 0.0))
+                             if c.job_kernel_counts else 0.0),
+            req_latencies=c.req_latencies(),
+            kv_peak_bytes=c.kv_peak_bytes())
             for c in sim.clients]
 
     @property

@@ -37,6 +37,7 @@ class DeviceSpec:
     n_slices: int = 64
     peak_flops: float = 197e12          # per slice, bf16
     hbm_bw: float = 819e9               # per slice, bytes/s
+    hbm_capacity: float = 16e9          # per slice, bytes (v5e: 16 GB/chip)
     occupancy: int = 8                  # blocks resident per slice
     launch_overhead: float = 4e-6       # per kernel/atom dispatch, seconds
     # dense DVFS ladder (real GPUs step ~15 MHz; 2.5% of f_max here)
@@ -70,6 +71,7 @@ class DeviceSpec:
         return cls(n_slices=54,
                    peak_flops=312e12 / 54,
                    hbm_bw=1.94e12 / 54,
+                   hbm_capacity=80e9 / 54,
                    occupancy=8,
                    launch_overhead=4e-6,
                    p_idle=0.4, p_dyn=6.3, p_static_host=40.0)
@@ -86,6 +88,7 @@ class DeviceSpec:
         return cls(n_slices=29,
                    peak_flops=121e12 / 29,
                    hbm_bw=300e9 / 29,
+                   hbm_capacity=24e9 / 29,
                    occupancy=8,
                    launch_overhead=4e-6,
                    p_idle=0.25, p_dyn=1.7, p_static_host=15.0)
@@ -277,6 +280,10 @@ class KernelTask:
     kid: int = field(default_factory=lambda: next(_kernel_ids))
     # Set by the atomizer: (parent kid, atom index, n_atoms).
     atom_of: Optional[tuple[int, int, int]] = None
+    # LLM serving phase: "prefill" (compute-bound, atomize like training) |
+    # "decode" (memory-bound, already sub-quantum — never atomized) | ""
+    # (phase-agnostic legacy kernel).  Carried from the workload trace.
+    phase: str = ""
 
     @property
     def is_atom(self) -> bool:

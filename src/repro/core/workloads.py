@@ -15,6 +15,7 @@ batches / long prompts.
 from __future__ import annotations
 
 import math
+from collections import deque
 from dataclasses import dataclass, field, replace
 from typing import Iterator, Optional
 
@@ -30,15 +31,26 @@ EW_TILE = 8192          # elements per elementwise block
 
 @dataclass(frozen=True)
 class OpDesc:
-    """One operator-level kernel: name + ground-truth work terms."""
+    """One operator-level kernel: name + ground-truth work terms.
+
+    ``phase`` tags LLM serving phases ("prefill" | "decode" | "") so the
+    control plane can treat compute-bound prefill and latency-critical
+    memory-bound decode differently (atomization, pressure sampling).  Only
+    the disaggregated LLM kinds tag it; legacy traces stay phase-less."""
 
     name: str
     flops: float
     bytes: float
     n_blocks: int
+    phase: str = ""
 
     def work(self) -> KernelWork:
         return KernelWork(self.flops, self.bytes, self.n_blocks)
+
+
+def tag_phase(ops: list[OpDesc], phase: str) -> list[OpDesc]:
+    """Return a copy of ``ops`` with every op tagged as ``phase``."""
+    return [replace(op, phase=phase) for op in ops]
 
 
 def matmul_op(name: str, M: int, N: int, K: int, dsize: int = DSIZE) -> OpDesc:
@@ -290,8 +302,40 @@ def fuse_trace(ops: list[OpDesc], group: int) -> list[OpDesc]:
         out.append(OpDesc(
             g[0].name + f"+f{len(g)}",
             sum(o.flops for o in g), sum(o.bytes for o in g),
-            max(o.n_blocks for o in g)))
+            max(o.n_blocks for o in g), phase=g[0].phase))
     return out
+
+
+# ---------------------------------------------------------------------------
+# KV-cache footprint model (per-tenant memory the SliceMap/right-sizer
+# must respect — LithOS-era tenants are compute-only; LLM decode holds HBM)
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_token(cfg: ArchConfig) -> float:
+    """KV-cache bytes one cached token costs: K and V, every layer, at the
+    KV-head width (GQA caches n_kv_heads, not n_heads)."""
+    return 2.0 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * DSIZE
+
+
+def kv_bytes(cfg: ArchConfig, batch: int, kv_len: int) -> float:
+    """Total KV-cache footprint of ``batch`` requests each holding a
+    ``kv_len``-token cache — the per-tenant memory term the right-sizer's
+    floor clamp is derived from."""
+    return float(batch) * float(kv_len) * kv_bytes_per_token(cfg)
+
+
+def kv_floor_slices(cfg: ArchConfig, device, total_kv_bytes: float) -> int:
+    """Minimum slice count whose pooled HBM capacity holds the footprint.
+
+    A tenant right-sized below this would have nowhere to keep its cache:
+    the clamp guarantees residency (weights/activations are out of scope —
+    tenants are opaque kernel streams; DESIGN.md §10)."""
+    if total_kv_bytes <= 0.0:
+        return 1
+    cap = getattr(device, "hbm_capacity", 0.0)
+    if cap <= 0.0:
+        return 1
+    return min(device.n_slices, max(1, math.ceil(total_kv_bytes / cap)))
 
 
 # ---------------------------------------------------------------------------
@@ -308,13 +352,176 @@ _trace_cache: dict = {}
 _mix_cache: dict = {}
 
 
+def sample_prompt_len(mix: tuple[tuple[int, float], ...],
+                      rng: np.random.Generator) -> int:
+    """One prompt-length draw from a mix — the single shared code path for
+    every kind that samples ``prompt_mix`` (job_trace and the continuous
+    client's arrival-time draw), so RNG streams stay identical no matter
+    which engine or phase split consumes the request."""
+    lp = _mix_cache.get(mix)
+    if lp is None:
+        lens, probs = zip(*mix)
+        lp = _mix_cache[mix] = (lens, np.array(probs) / sum(probs))
+    return int(rng.choice(lp[0], p=lp[1]))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (llm_continuous): per-iteration batch recomposition
+# ---------------------------------------------------------------------------
+
+#: decode kv_len quantization for the shared iteration traces — keeps the
+#: memoized trace population bounded while kv advances every token
+KV_BUCKET = 64
+
+
+def bucket_kv(kv_len: int) -> int:
+    """Round a kv length up to the trace-memoization bucket."""
+    return max(KV_BUCKET,
+               ((int(kv_len) + KV_BUCKET - 1) // KV_BUCKET) * KV_BUCKET)
+
+
+def continuous_prefill_trace(cfg: ArchConfig, S: int,
+                             fusion: int) -> list[OpDesc]:
+    """One joining request's prefill segment (B=1), phase-tagged, memoized.
+    Shared across jobs — treat as read-only (the job_trace contract)."""
+    key = (id(cfg), "cont_prefill", S, fusion)
+    hit = _trace_cache.get(key)
+    if hit is None:
+        t = tag_phase(fuse_trace(prefill_trace(cfg, 1, S), fusion),
+                      "prefill")
+        _trace_cache[key] = (cfg, t)
+        return t
+    return hit[1]
+
+
+def continuous_decode_trace(cfg: ArchConfig, B: int, kv_len: int,
+                            fusion: int) -> list[OpDesc]:
+    """One decode iteration over the running batch (``kv_len`` already
+    bucketed by the caller), phase-tagged, memoized."""
+    key = (id(cfg), "cont_decode", B, kv_len, fusion)
+    hit = _trace_cache.get(key)
+    if hit is None:
+        t = tag_phase(fuse_trace(decode_step_trace(cfg, B, kv_len), fusion),
+                      "decode")
+        _trace_cache[key] = (cfg, t)
+        return t
+    return hit[1]
+
+
+@dataclass
+class Request:
+    """One autoregressive request inside a continuous-batching tenant."""
+
+    rid: int
+    prompt_len: int
+    decode_budget: int              # tokens to emit before leaving (>= 1)
+    arrival: float
+    kv_len: int = 0                 # cached tokens (0 until admitted)
+    emitted: int = 0
+
+
+class ContinuousBatchState:
+    """Batch-composition state machine for one ``llm_continuous`` tenant.
+
+    Requests arrive into ``waiting``; every iteration re-computes the
+    running batch (waiting requests join up to ``max_batch``, exhausted
+    requests leave), and each surviving request's ``kv_len`` advances by
+    one emitted token.  All stochastic draws happen at arrival time (in
+    the client's RNG stream — engine-parity safe); iteration transitions
+    are purely deterministic functions of this state.
+
+    Invariants (property-tested in tests/test_llm_workloads.py):
+      * ``len(running) <= max_batch`` always;
+      * per request, ``kv_len`` is monotone non-decreasing until eviction;
+      * ``total_kv_bytes`` == sum of the running requests' kv footprints
+        (KV bytes conservation across join/leave events).
+    """
+
+    def __init__(self, cfg: ArchConfig, max_batch: int):
+        self.cfg = cfg
+        self.max_batch = max(1, int(max_batch))
+        self.per_token = kv_bytes_per_token(cfg)
+        self.waiting: deque[Request] = deque()
+        self.running: list[Request] = []
+        self.iteration = 0
+        self.total_kv_bytes = 0.0
+        self.kv_peak_bytes = 0.0
+        self.req_latencies: list[float] = []
+        self.n_requests = 0
+        self.n_completed = 0
+        self._joiners: list[Request] = []
+        self._decoders: list[Request] = []
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def in_iteration(self) -> bool:
+        return bool(self._joiners or self._decoders)
+
+    def add_request(self, prompt_len: int, decode_budget: int,
+                    arrival: float) -> Request:
+        r = Request(self.n_requests, int(prompt_len),
+                    max(1, int(decode_budget)), arrival)
+        self.n_requests += 1
+        self.waiting.append(r)
+        return r
+
+    def begin_iteration(self) -> tuple[list[Request], list[Request]]:
+        """Recompute the batch composition for the next iteration.
+
+        Returns ``(joiners, decoders)``: requests admitted this iteration
+        (they prefill, writing their prompt into the KV cache) and requests
+        already resident (they decode one token against their cache)."""
+        assert not self.in_iteration, "iteration already open"
+        self._decoders = list(self.running)
+        while self.waiting and len(self.running) < self.max_batch:
+            r = self.waiting.popleft()
+            r.kv_len = r.prompt_len          # cache written during prefill
+            self.total_kv_bytes += r.kv_len * self.per_token
+            self.running.append(r)
+            self._joiners.append(r)
+        if self.total_kv_bytes > self.kv_peak_bytes:
+            self.kv_peak_bytes = self.total_kv_bytes
+        self.iteration += 1
+        return list(self._joiners), list(self._decoders)
+
+    def finish_iteration(self, now: float) -> list[Request]:
+        """One token emitted per resident request: kv advances, exhausted
+        requests leave (their KV bytes are reclaimed).  Returns leavers."""
+        for r in self._decoders:
+            r.kv_len += 1
+            r.emitted += 1
+            self.total_kv_bytes += self.per_token
+        for r in self._joiners:
+            r.kv_len += 1                    # prefill emits the first token
+            r.emitted = 1
+            self.total_kv_bytes += self.per_token
+        self._joiners = []
+        self._decoders = []
+        done = [r for r in self.running if r.emitted >= r.decode_budget]
+        if done:
+            gone = set(id(r) for r in done)
+            self.running = [r for r in self.running if id(r) not in gone]
+            for r in done:
+                self.total_kv_bytes -= r.kv_len * self.per_token
+                self.req_latencies.append(now - r.arrival)
+                self.n_completed += 1
+        if self.total_kv_bytes > self.kv_peak_bytes:
+            self.kv_peak_bytes = self.total_kv_bytes
+        return done
+
+
 @dataclass
 class AppSpec:
     """One tenant: a model + load pattern + SLO + quota/priority."""
 
     name: str
     cfg: ArchConfig
-    kind: str                       # "llm_infer" | "fwd_infer" | "train"
+    # "llm_infer" | "fwd_infer" | "train" | "llm_prefill" | "llm_decode"
+    # | "llm_continuous" (disaggregated serving phases + continuous batching)
+    kind: str
     priority: Priority = Priority.BEST_EFFORT
     quota_slices: int = 0
     # open-loop inference load
@@ -324,6 +531,7 @@ class AppSpec:
     prompt_mix: tuple[tuple[int, float], ...] = ((512, 0.6), (2048, 0.3),
                                                  (8192, 0.1))
     decode_tokens: int = 32
+    max_batch: int = 8              # llm_continuous: running-batch cap
     # train load (closed loop)
     train_batch: int = 8
     train_seq: int = 2048
@@ -349,12 +557,7 @@ class AppSpec:
                 _trace_cache[key] = (self.cfg, t)
                 return t
             return hit[1]
-        mix = self.prompt_mix
-        lp = _mix_cache.get(mix)
-        if lp is None:
-            lens, probs = zip(*mix)
-            lp = _mix_cache[mix] = (lens, np.array(probs) / sum(probs))
-        S = int(rng.choice(lp[0], p=lp[1]))
+        S = sample_prompt_len(self.prompt_mix, rng)
         if self.kind == "fwd_infer":
             key = (id(self.cfg), "fwd", self.batch, S, self.fusion)
             hit = _trace_cache.get(key)
@@ -364,8 +567,52 @@ class AppSpec:
                 _trace_cache[key] = (self.cfg, t)
                 return t
             return hit[1]
+        if self.kind == "llm_prefill":
+            # disaggregated prefill tenant: one compute-bound prompt pass
+            key = (id(self.cfg), "llm_prefill", self.batch, S, self.fusion)
+            hit = _trace_cache.get(key)
+            if hit is None:
+                t = tag_phase(fuse_trace(prefill_trace(self.cfg, self.batch,
+                                                       S), self.fusion),
+                              "prefill")
+                _trace_cache[key] = (self.cfg, t)
+                return t
+            return hit[1]
         n_out = max(1, int(rng.geometric(1.0 / self.decode_tokens)))
         n_out = min(n_out, 4 * self.decode_tokens)
+        if self.kind == "llm_decode":
+            # disaggregated decode tenant: the prompt is already cached
+            # (prefill ran elsewhere); n_out memory-bound token steps.
+            key = (id(self.cfg), "llm_decode", self.batch, S, n_out,
+                   self.fusion)
+            hit = _trace_cache.get(key)
+            if hit is None:
+                step = decode_step_trace(self.cfg, self.batch,
+                                         S + n_out // 2)
+                ops: list[OpDesc] = []
+                for _ in range(n_out):
+                    ops += step
+                t = tag_phase(fuse_trace(ops, self.fusion), "decode")
+                _trace_cache[key] = (self.cfg, t)
+                return t
+            return hit[1]
+        if self.kind == "llm_continuous":
+            # Demand-estimation proxy ONLY (mean_demand / routers): one
+            # request's worth of work at B=1.  Real jobs are built per
+            # iteration by the client from ContinuousBatchState — never
+            # from this trace.
+            key = (id(self.cfg), "llm_cont_proxy", S, n_out, self.fusion)
+            hit = _trace_cache.get(key)
+            if hit is None:
+                ops = tag_phase(prefill_trace(self.cfg, 1, S), "prefill")
+                step = tag_phase(decode_step_trace(self.cfg, 1,
+                                                   S + n_out // 2), "decode")
+                for _ in range(n_out):
+                    ops += step
+                t = fuse_trace(ops, self.fusion)
+                _trace_cache[key] = (self.cfg, t)
+                return t
+            return hit[1]
         key = (id(self.cfg), "llm", self.batch, S, n_out, self.fusion)
         hit = _trace_cache.get(key)
         if hit is None:

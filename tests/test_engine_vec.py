@@ -74,6 +74,49 @@ def test_engine_parity_lithos_full_features():
     assert_bit_identical(a, b)
 
 
+def cont_app(name="cont", rps=40.0):
+    """Continuous-batching serving tenant: dynamic per-iteration batch
+    composition (requests join/leave), arrival-time RNG draws."""
+    return AppSpec(name, OLMO, "llm_continuous", priority=Priority.HIGH,
+                   rps=rps, max_batch=4, decode_tokens=8, fusion=8,
+                   prompt_mix=((256, 0.7), (1024, 0.3)), seed=5)
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_engine_parity_llm_continuous(system):
+    """The dynamic-batch code path (iteration jobs rebuilt every sync,
+    requests joining/leaving mid-run) must hold bit-for-bit parity on
+    every system — including request-level latencies and KV peaks."""
+    apps = [cont_app(), be_train()]
+    a, b = run_both(system, apps=apps)
+    assert len(a.records) > 0
+    assert_bit_identical(a, b)
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.req_latencies == cb.req_latencies
+        assert ca.kv_peak_bytes == cb.kv_peak_bytes
+    cont = a.client("cont")
+    assert cont.kv_peak_bytes > 0.0      # requests were admitted
+    if system == "lithos":               # contended baselines may starve
+        assert cont.n_completed > 0          # iterations ran
+        assert len(cont.req_latencies) > 0   # requests completed end to end
+
+
+def test_engine_parity_llm_disaggregated_mix():
+    """Disaggregated prefill + decode tenants alongside a continuous one:
+    phase-tagged kernels, decode batch-marks, and the memory floor all
+    active at once, with right-sizing on."""
+    apps = [cont_app(rps=20.0),
+            AppSpec("pre", LLAMA, "llm_prefill", priority=Priority.BEST_EFFORT,
+                    batch=2, fusion=8, prompt_mix=((2048, 1.0),), seed=6),
+            AppSpec("dec", OLMO, "llm_decode", priority=Priority.HIGH,
+                    rps=10.0, batch=4, decode_tokens=6, fusion=8,
+                    prompt_mix=((512, 1.0),), seed=7)]
+    a, b = run_both("lithos", apps=apps,
+                    cfg=LithOSConfig(rightsize=True))
+    assert len(a.records) > 0
+    assert_bit_identical(a, b)
+
+
 def test_engine_parity_node_migration():
     """Multi-device node with the lending protocol: detach/admit/hold and
     cross-device arrival re-seeding must keep parity."""

@@ -1,0 +1,421 @@
+"""LLM-era tenants: continuous batching, KV-cache footprint, memory
+floor, phase-aware atomization, decode-roofline calibration, and the
+RNG draw-order (seed stability) contract.
+
+Covers the PR 9 tentpole end to end at unit level; bit-for-bit engine
+parity on the same code paths lives in tests/test_engine_vec.py and
+scripts/parity_check.py.
+"""
+import math
+
+import numpy as np
+import pytest
+
+try:                # only the property tests need hypothesis; plain tests run
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.configs.registry import get_config
+from repro.core import types as T
+from repro.core.atomizer import KernelAtomizer
+from repro.core.costmodel import CostModel
+from repro.core.hierarchy import HierarchyCoordinator, Pressure
+from repro.core.lithos import evaluate, make_policy
+from repro.core.llm_costs import (decode_attention_work, decode_cost_table,
+                                  flash_attention_work, roofline_terms,
+                                  seed_decode_predictor)
+from repro.core.predictor import LatencyPredictor
+from repro.core.queues import Client
+from repro.core.rightsizer import RightSizer, ScalingFit
+from repro.core.scheduler import LithOSConfig
+from repro.core.simulator import make_simulator
+from repro.core.types import (DeviceSpec, KernelTask, KernelWork, NodeConfig,
+                              Priority)
+from repro.core.workloads import (AppSpec, ContinuousBatchState,
+                                  bucket_kv, decode_attention_op, kv_bytes,
+                                  kv_bytes_per_token, kv_floor_slices,
+                                  sample_prompt_len)
+
+DEV = DeviceSpec.a100_like()
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+
+
+def cont_spec(**kw):
+    kw.setdefault("rps", 40.0)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("decode_tokens", 8)
+    kw.setdefault("prompt_mix", ((256, 0.7), (1024, 0.3)))
+    kw.setdefault("priority", Priority.HIGH)
+    kw.setdefault("fusion", 8)
+    return AppSpec(kw.pop("name", "cont"), kw.pop("cfg", OLMO),
+                   "llm_continuous", **kw)
+
+
+# ---------------------------------------------------------------------------
+# KV footprint model
+# ---------------------------------------------------------------------------
+
+
+def test_kv_bytes_model():
+    # 2 (K+V) * layers * kv_heads * head_dim * dsize, per token
+    per_tok = kv_bytes_per_token(OLMO)
+    assert per_tok == 2.0 * OLMO.n_layers * OLMO.n_kv_heads \
+        * OLMO.head_dim * 2
+    assert kv_bytes(OLMO, 4, 1000) == 4 * 1000 * per_tok
+    assert kv_bytes(OLMO, 0, 1000) == 0.0
+
+
+def test_kv_floor_slices():
+    dev = DeviceSpec(n_slices=8, hbm_capacity=1e9)
+    assert kv_floor_slices(OLMO, dev, 0.0) == 1
+    assert kv_floor_slices(OLMO, dev, 0.5e9) == 1
+    assert kv_floor_slices(OLMO, dev, 2.5e9) == 3
+    assert kv_floor_slices(OLMO, dev, 1e12) == 8          # capped at device
+    nocap = DeviceSpec(n_slices=8, hbm_capacity=0.0)
+    assert kv_floor_slices(OLMO, nocap, 1e12) == 1        # gated off
+
+
+# ---------------------------------------------------------------------------
+# ContinuousBatchState invariants (hypothesis where available)
+# ---------------------------------------------------------------------------
+
+
+def _drive(cbs, script, now=0.0):
+    """Replay a script of ('add', prompt, budget) | ('iter',) actions,
+    checking the three invariants after every step.  Returns per-rid
+    kv_len histories."""
+    hist: dict[int, list[int]] = {}
+    evicted: set[int] = set()
+    for step in script:
+        if step[0] == "add":
+            cbs.add_request(step[1], step[2], now)
+        else:
+            if not cbs.has_work:
+                continue
+            cbs.begin_iteration()
+            assert len(cbs.running) <= cbs.max_batch          # cap
+            now += 1.0
+            done = cbs.finish_iteration(now)
+            for r in cbs.running:
+                assert r.rid not in evicted
+                hist.setdefault(r.rid, []).append(r.kv_len)
+            for r in done:
+                hist.setdefault(r.rid, []).append(r.kv_len)
+                evicted.add(r.rid)
+        # KV conservation across join/leave
+        expect = sum(r.kv_len for r in cbs.running) \
+            * cbs.per_token
+        assert cbs.total_kv_bytes == pytest.approx(expect, abs=1e-3)
+    for rid, seq in hist.items():
+        assert all(b >= a for a, b in zip(seq, seq[1:])), \
+            f"kv_len not monotone for rid {rid}: {seq}"
+    return hist
+
+
+if HAS_HYPOTHESIS:
+    @given(cap=st.integers(1, 6),
+           script=st.lists(
+               st.one_of(
+                   st.tuples(st.just("add"), st.integers(1, 2048),
+                             st.integers(1, 6)),
+                   st.tuples(st.just("iter"))),
+               min_size=1, max_size=60))
+    @settings(max_examples=150, deadline=None)
+    def test_cbs_invariants_property(cap, script):
+        cbs = ContinuousBatchState(OLMO, max_batch=cap)
+        _drive(cbs, script)
+else:
+    def test_cbs_invariants_property():
+        pytest.skip("hypothesis not installed")
+
+
+def test_cbs_join_leave_accounting():
+    cbs = ContinuousBatchState(OLMO, max_batch=2)
+    for i in range(4):
+        cbs.add_request(100, 2, arrival=float(i))
+    cbs.begin_iteration()                  # admits 2, 2 wait
+    assert len(cbs.running) == 2 and len(cbs.waiting) == 2
+    cbs.finish_iteration(5.0)              # first token emitted
+    assert cbs.total_kv_bytes == pytest.approx(
+        2 * 101 * cbs.per_token)
+    cbs.begin_iteration()                  # batch full: no admission
+    assert len(cbs.running) == 2
+    done = cbs.finish_iteration(6.0)       # budget 2 -> both leave
+    assert len(done) == 2 and len(cbs.req_latencies) == 2
+    cbs.begin_iteration()                  # the two waiters join
+    assert len(cbs.running) == 2 and not cbs.waiting
+    # KV of the leavers was reclaimed before the joiners reserved
+    assert cbs.total_kv_bytes == pytest.approx(2 * 100 * cbs.per_token)
+    assert cbs.kv_peak_bytes >= cbs.total_kv_bytes
+
+
+def test_bucket_kv_deterministic_integer():
+    assert bucket_kv(1) == 64
+    assert bucket_kv(64) == 64
+    assert bucket_kv(65) == 128
+    assert bucket_kv(513) == 576
+
+
+# ---------------------------------------------------------------------------
+# RightSizer memory floor
+# ---------------------------------------------------------------------------
+
+
+def mk_task(blocks=512, cid=0):
+    return KernelTask("op", KernelWork(1e12, 1e9, blocks), client_id=cid,
+                      queue_id=cid, ordinal=0)
+
+
+def test_memory_floor_clamps_fit_shrink():
+    rs = RightSizer(full_slices=54, occupancy=8, slip=1.1)
+    t = mk_task(blocks=5120, cid=7)
+    # a serial-dominated kernel: the fit alone shrinks to ~1 slice
+    fit = ScalingFit()
+    fit.points = {1: 2e-3, 54: 1.9e-3}
+    rs.fits[t.key()] = fit
+    rs._fit(fit)
+    unclamped = rs.decide(t, 54)
+    assert unclamped < 10
+    rs.set_memory_floor(7, 12)
+    assert rs.decide(t, 54) >= 12
+    # the floor never forces more than the allocation
+    assert rs.decide(t, 6) == 6
+
+
+def test_memory_floor_clamps_occupancy_bound():
+    rs = RightSizer(full_slices=54, occupancy=8)
+    t = mk_task(blocks=8, cid=3)           # occupancy bound = 1
+    assert rs.decide(t, 54) == 1
+    rs.set_memory_floor(3, 5)
+    assert rs.decide(t, 54) == 5
+
+
+def test_memory_floor_relaxes():
+    rs = RightSizer(full_slices=54, occupancy=8)
+    rs.set_memory_floor(3, 5)
+    assert rs.memory_floor == {3: 5}
+    rs.set_memory_floor(3, 1)              # requests completed: floor gone
+    assert rs.memory_floor == {}
+
+
+def test_memory_floor_binds_in_simulation():
+    """End to end: a decode tenant whose KV cannot fit one slice is never
+    right-sized below its floor — and the floor is the cause (the same
+    scenario with ample HBM does shrink decode kernels)."""
+    def run(hbm_capacity):
+        dev = DeviceSpec(n_slices=8, hbm_capacity=hbm_capacity)
+        app = cont_spec(rps=200.0, max_batch=4,
+                        prompt_mix=((512, 1.0),), quota_slices=4, seed=9)
+        T.reset_kernel_ids()
+        res = evaluate("lithos", dev, [app], horizon=0.5, seed=3,
+                       lithos_config=LithOSConfig(rightsize=True))
+        return [r for r in res.records if r.task.phase == "decode"]
+
+    # one request's KV alone needs ceil(513*per_tok / 16e6) = 5 slices
+    floor_one_req = kv_floor_slices(OLMO, DeviceSpec(n_slices=8,
+                                                     hbm_capacity=16e6),
+                                    kv_bytes(OLMO, 1, 513))
+    assert floor_one_req >= 4
+    tight = run(16e6)
+    assert tight and all(r.slices >= floor_one_req for r in tight)
+    ample = run(1e12)
+    assert ample and any(r.slices < floor_one_req for r in ample)
+
+
+# ---------------------------------------------------------------------------
+# Phase-aware atomization + pressure sampling
+# ---------------------------------------------------------------------------
+
+
+def test_atomizer_leaves_decode_whole():
+    at = KernelAtomizer()
+    dec = KernelTask("dec", KernelWork(1e12, 1e10, 4096), phase="decode")
+    pre = KernelTask("pre", KernelWork(1e13, 1e10, 4096), phase="prefill")
+    # a multi-ms prediction would normally split hard
+    assert at.plan(dec, 20e-3) == 1
+    assert at.plan(dec, None, unseen_conservative=True) == 1
+    assert at.plan(pre, 20e-3) > 1       # prefill atomizes like training
+
+
+def test_phase_flows_into_kernel_tasks():
+    spec = cont_spec(rps=0.0)
+    client = Client(0, spec, horizon=10.0, seed=0)
+    client.cbs.add_request(100, 5, 0.0)
+    client.cbs.add_request(200, 5, 0.0)
+    assert client.start_next_job(0.0)
+    phases = {t.phase for b in client.current.batches for t in b.tasks}
+    assert phases == {"prefill"}          # first iteration: joiners only
+    # drain the iteration -> both requests resident -> next one decodes
+    while client.current is not None:
+        client.pop()
+        client.kernel_done(1.0)
+    assert len(client.cbs.running) == 2
+    assert client.start_next_job(2.0)
+    phases = {t.phase for b in client.current.batches for t in b.tasks}
+    assert phases == {"decode"}
+
+
+def test_pressure_decode_depth_weighs_double():
+    coord = HierarchyCoordinator.__new__(HierarchyCoordinator)
+    coord.config = NodeConfig(hp_depth_hi=3, free_hi=0.5, free_lo=0.125)
+    assert not coord._saturated(Pressure(1, 0.5, 1))
+    assert coord._saturated(Pressure(1, 0.5, 1, decode_depth=2))
+    assert coord._lender(Pressure(0, 0.9, 0))
+    assert not coord._lender(Pressure(0, 0.9, 0, decode_depth=1))
+    # legacy 3-arg construction still works and is decode-free
+    assert Pressure(2, 0.1, 3).decode_depth == 0
+
+
+def test_sim_member_pressure_counts_decode_backlog():
+    from repro.core.node import SimMember
+    spec = cont_spec(rps=0.0)             # manual arrivals
+    policy = make_policy("lithos", DEV, [spec])
+    sim = make_simulator(DEV, [spec], policy, horizon=10.0, seed=0)
+    member = SimMember(sim, policy)
+    assert member.pressure().decode_depth == 0
+    c = sim.clients[0]
+    for _ in range(6):                    # 1 in-flight + 2 waiting beyond cap
+        c.on_arrival(0.0)
+    p = member.pressure()
+    assert p.decode_depth == len(c.cbs.waiting) + 1
+    assert p.active >= 1
+
+
+# ---------------------------------------------------------------------------
+# Decode roofline calibration (regression pin)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_work_matches_sim_trace_op():
+    """The kernel-geometry work terms and the sim's decode trace op must
+    agree exactly at block-aligned shapes (the trace op is the kernel's
+    cost in the simulator)."""
+    for B, S in ((1, 512), (4, 2048), (8, 8192), (2, 300)):
+        kw = decode_attention_work(B, S, OLMO.n_heads, OLMO.n_kv_heads,
+                                   OLMO.head_dim)
+        op = decode_attention_op("d", B, S, OLMO.n_heads, OLMO.n_kv_heads,
+                                 OLMO.head_dim)
+        assert kw.flops == pytest.approx(op.flops, rel=1e-6)
+        assert kw.bytes == pytest.approx(op.bytes, rel=1e-6)
+
+
+def test_decode_cost_table_matches_roofline():
+    """CostModel ground truth == roofline bound_time x wave quantization
+    + launch overhead, for every calibrated decode entry.  A kernel or
+    analyzer change that skews decode timings breaks this pin."""
+    cost = CostModel(DEV)
+    for e in decode_cost_table(LLAMA, DEV):
+        ph = cost.phases(e.work)
+        t_eff = max(1, min(DEV.n_slices, ph.max_useful_slices))
+        quant = ph.quantization(t_eff, DEV.occupancy)
+        expect = e.roofline_s * quant + DEV.launch_overhead
+        assert e.latency_s == pytest.approx(expect, rel=1e-9), \
+            f"B={e.batch} S={e.kv_len}"
+        # decode is memory-bound by design
+        assert not cost.is_compute_bound(e.work)
+
+
+def test_flash_attention_work_padding_bounded():
+    """Prefill (flash) work terms: padding inflates both cost views by the
+    same bounded factor — never more than one block's worth per dim."""
+    for B, Sq in ((1, 512), (2, 700), (4, 8192)):
+        kw = flash_attention_work(B, Sq, Sq, LLAMA.n_heads,
+                                  LLAMA.n_kv_heads, LLAMA.head_dim)
+        ideal = 2.0 * 2.0 * B * LLAMA.n_heads * Sq * Sq * LLAMA.head_dim
+        assert kw.flops >= ideal
+        pad = (math.ceil(Sq / 512) * 512 / Sq) ** 2 if Sq >= 512 else 4.0
+        assert kw.flops <= ideal * pad * 1.01
+
+
+def test_seed_decode_predictor_warm_start():
+    from repro.core.workloads import continuous_decode_trace
+    pred = LatencyPredictor()
+    trace = continuous_decode_trace(LLAMA, 4, 2048, 6)
+    n = seed_decode_predictor(pred, 7, trace, DEV, DEV.n_slices)
+    assert n == len(trace)
+    cost = CostModel(DEV)
+    for ordinal, op in enumerate(trace):
+        t = KernelTask(op.name, op.work(), client_id=7, queue_id=7,
+                       ordinal=ordinal)
+        got = pred.predict(t, DEV.n_slices)
+        assert got == pytest.approx(cost.latency(op.work(), DEV.n_slices),
+                                    rel=1e-6)
+
+
+def test_roofline_terms_effective_parallelism():
+    w = KernelWork(1e12, 1e9, 8)          # tiny decode grid
+    terms = roofline_terms(w, DEV)
+    assert terms.chips == 1               # occupancy-capped, not 54
+    big = roofline_terms(KernelWork(1e12, 1e9, 10_000), DEV)
+    assert big.chips == DEV.n_slices
+
+
+# ---------------------------------------------------------------------------
+# Seed stability: the RNG draw-order contract (satellite 5)
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_draw_order_pinned():
+    """The continuous client's stream is: arrivals first (Poisson count +
+    uniforms, at construction), then per-arrival (prompt_len, budget)
+    pairs in arrival order.  Splitting a request into prefill/decode
+    segments must never add or reorder draws — this golden replay breaks
+    if it does."""
+    spec = cont_spec(seed=5)
+    client = Client(3, spec, horizon=1.0, seed=11)
+    for t in client.arrivals():
+        client.on_arrival(t)
+    # no kernels completed: every request is still live, in arrival order
+    got = [(r.prompt_len, r.decode_budget)
+           for r in list(client.cbs.running) + list(client.cbs.waiting)]
+    # independent replay of the documented draw order
+    rng = np.random.default_rng((11, spec.seed, 3))
+    arrivals = spec.arrivals(1.0, rng)
+    expect = []
+    for _ in arrivals:
+        S = sample_prompt_len(spec.prompt_mix, rng)
+        n_out = min(max(1, int(rng.geometric(1.0 / spec.decode_tokens))),
+                    4 * spec.decode_tokens)
+        expect.append((S, n_out))
+    assert len(arrivals) > 10             # the scenario actually has load
+    assert client.cbs.n_requests == len(arrivals)
+    assert got == expect
+
+
+def test_continuous_requests_identical_across_engines():
+    """Same seed -> bit-identical request streams (prompt lens, budgets,
+    kv trajectories) under ref and vec engines."""
+    def requests(engine):
+        T.reset_kernel_ids()
+        spec = cont_spec(seed=5)
+        policy = make_policy("lithos", DEV, [spec])
+        sim = make_simulator(DEV, [spec], policy, horizon=1.0, seed=0,
+                             engine=engine)
+        sim.run()
+        cbs = sim.clients[0].cbs
+        return ([(r.rid, r.prompt_len, r.decode_budget, r.kv_len, r.emitted)
+                 for r in list(cbs.running) + list(cbs.waiting)],
+                cbs.n_requests, cbs.n_completed, cbs.req_latencies,
+                cbs.total_kv_bytes, cbs.kv_peak_bytes)
+    assert requests("ref") == requests("vec")
+
+
+def test_legacy_llm_infer_draws_unchanged():
+    """Golden pin: llm_infer's job_trace consumes exactly (S, n_out) per
+    job, in that order, and stays phase-less — the phase split and the
+    sample_prompt_len extraction must not perturb legacy streams."""
+    spec = AppSpec("x", OLMO, "llm_infer", rps=1.0, decode_tokens=8,
+                   prompt_mix=((256, 0.7), (1024, 0.3)))
+    rng = np.random.default_rng(42)
+    ref = np.random.default_rng(42)
+    for _ in range(5):
+        trace = spec.job_trace(rng)
+        assert all(op.phase == "" for op in trace)
+        sample_prompt_len(spec.prompt_mix, ref)
+        ref.geometric(1.0 / spec.decode_tokens)
+        # generator states identical after every job: same draw count,
+        # same draw kinds, same order
+        assert rng.bit_generator.state == ref.bit_generator.state
