@@ -43,7 +43,7 @@ from repro.core.hierarchy import (ROUTERS, HierarchyCoordinator, Member,
 from repro.core.node import (NodeCoordinator, NodeResult, SimResult,
                              build_node, demand_estimate, place)
 from repro.core.slices import MemberLedger
-from repro.core.types import ClusterConfig, ClusterSpec, Priority
+from repro.core.types import ClusterConfig, ClusterSpec, FaultPlan, Priority
 from repro.core.workloads import AppSpec
 
 CLUSTER_ROUTERS = ROUTERS + ("frag_aware",)
@@ -83,6 +83,20 @@ class NodeMember(Member):
 
     def invalidate_peeks(self):
         self.coord.invalidate_peeks()
+
+    # -- fault domain --------------------------------------------------------
+
+    def failed(self) -> bool:
+        """A node is dead only when every device below it is."""
+        ms = self.coord.members
+        return bool(ms) and all(m.failed() for m in ms)
+
+    def has_faults(self) -> bool:
+        return any(m.has_faults() for m in self.coord.members)
+
+    def can_host(self, client) -> bool:
+        return any(not m.failed() and m.can_host(client)
+                   for m in self.coord.members)
 
     # -- pressure / placement ----------------------------------------------
 
@@ -145,11 +159,17 @@ class NodeMember(Member):
 
     def admit_client(self, client, priority, state, *, after: float,
                      release_at: float):
-        frees = [m._free() / m.capacity for m in self.coord.members]
-        d = min(range(len(frees)), key=lambda i: (-frees[i], i))
-        self.coord.members[d].admit_client(client, priority, state,
-                                           after=after,
-                                           release_at=release_at)
+        ms = self.coord.members
+        # dead devices never receive admits; among the survivors, prefer
+        # one whose capacity can hold the client's KV floor (can_host),
+        # then the most free (capacity-normalized), ties to the lowest id
+        live = [i for i in range(len(ms)) if not ms[i].failed()]
+        assert live, "admit_client on a fully dead node"
+        fit = [i for i in live if ms[i].can_host(client)]
+        cands = fit or live
+        d = min(cands, key=lambda i: (-ms[i]._free() / ms[i].capacity, i))
+        ms[d].admit_client(client, priority, state, after=after,
+                           release_at=release_at)
         self.coord.ledger.adopt(client.cid, d)
 
     # -- invariants ---------------------------------------------------------
@@ -431,7 +451,8 @@ def evaluate_cluster(system: str, cluster: ClusterSpec,
                      placement: Optional[list[tuple[int, int]]] = None,
                      engine: str = "ref",
                      collect_records: bool = True,
-                     frag_sample: bool = True) -> ClusterResult:
+                     frag_sample: bool = True,
+                     faults: Optional[FaultPlan] = None) -> ClusterResult:
     """Place ``apps`` across the cluster and run one
     :class:`NodeCoordinator` per node under a
     :class:`ClusterCoordinator`.
@@ -442,12 +463,16 @@ def evaluate_cluster(system: str, cluster: ClusterSpec,
     (node, device) per app, bypassing both routers.  With no cluster-level
     mechanisms enabled (migration off, no power cap) member nodes are
     uncoupled and run sequentially — bit-for-bit the per-node evaluation;
-    a 1-node cluster then reproduces ``evaluate_node`` exactly."""
+    a 1-node cluster then reproduces ``evaluate_node`` exactly.
+
+    ``faults`` addresses devices by *flat* index across the cluster
+    (node 0's devices first, then node 1's, ...)."""
     cfg = cluster_config or ClusterConfig()
     if placement is None:
         placement = place_cluster(cluster, apps, router, node_router)
     assert len(placement) == len(apps)
     node_coords = []
+    fault_base = 0
     for ni, node in enumerate(cluster.nodes):
         sel = [i for i, (n, _) in enumerate(placement) if n == ni]
         coord = build_node(system, node, [apps[i] for i in sel],
@@ -455,7 +480,9 @@ def evaluate_cluster(system: str, cluster: ClusterSpec,
                            horizon=horizon, seed=seed,
                            lithos_config=lithos_config,
                            node_config=cfg.node_config, engine=engine,
-                           collect_records=collect_records, cids=sel)
+                           collect_records=collect_records, cids=sel,
+                           faults=faults, fault_base=fault_base)
+        fault_base += node.n_devices
         node_coords.append(coord)
     coord = ClusterCoordinator(
         cluster, {i: n for i, (n, _) in enumerate(placement)},

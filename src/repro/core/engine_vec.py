@@ -71,7 +71,7 @@ class VecSimulator(Simulator):
 
     def __init__(self, device, apps, policy, *, horizon: float = 30.0,
                  seed: int = 0, cids: Optional[list[int]] = None,
-                 collect_records: bool = True):
+                 collect_records: bool = True, faults=()):
         # incremental aggregates mirroring the reference's per-event scans;
         # set before super().__init__ so policy.attach (called there) can
         # already use free_slices()/held_slices()
@@ -80,7 +80,8 @@ class VecSimulator(Simulator):
         # deferred dispatch ETAs: (slot, kid), flushed in dispatch order
         self._eta_pending: list[tuple[int, int]] = []
         super().__init__(device, apps, policy, horizon=horizon, seed=seed,
-                         cids=cids, collect_records=collect_records)
+                         cids=cids, collect_records=collect_records,
+                         faults=faults)
         # slot capacity: most policies dispatch at most one kernel per
         # client AND one slice per kernel bounds in-flight by n_slices;
         # MPS-style policies can exceed this (0-slice kernels), which
@@ -203,7 +204,8 @@ class VecSimulator(Simulator):
         return self._held_total
 
     def free_slices(self) -> int:
-        return max(0, self.device.n_slices - self._held_total)
+        return max(0, self.device.n_slices - self.n_retired
+                   - self._held_total)
 
     # -- dispatch interface ----------------------------------------------------
 
@@ -456,6 +458,24 @@ class VecSimulator(Simulator):
             self.records.append(rec)
         self.policy.on_complete(ek, rec)
 
+    # -- fault injection ---------------------------------------------------------
+
+    def _apply_fault(self, f) -> bool:
+        """Vectorized transient_stall (the stall lands in the slot arrays,
+        mirrored into the ExecKernel for any scalar reads); slice_retired
+        and device_dead delegate to the reference implementation — kill()
+        already releases slots and writes back client accumulators."""
+        if f.kind != "transient_stall":
+            return super()._apply_fault(f)
+        self.fault_log.append((self.now, f))
+        self._flush_etas()
+        for ek in self.in_flight.values():
+            slot = self._slot_of_kid[ek.task.kid]
+            self._s_ov[slot] += f.duration
+            ek.overhead_left = float(self._s_ov[slot])
+            self._schedule_completion(ek)
+        return False
+
     # -- frequency / migration plumbing (flush-before-push discipline) ----------
 
     def set_frequency(self, f: float):
@@ -512,6 +532,12 @@ class VecSimulator(Simulator):
         if self.policy.tick_interval > 0:
             self._push(self.policy.tick_interval, "tick", None)
         self._push(self.horizon, "end", None)
+        # fault events after end, matching the reference push order: at
+        # equal timestamps faults yield to stream arrivals (arrivals win
+        # heap ties) and beat runtime-pushed ticks/completions (larger
+        # counters) — identical ordering in both engines
+        for f in self._fault_events:
+            self._push(f.t, "fault", f)
 
     def peek_time(self) -> Optional[float]:
         if self.done:
@@ -585,6 +611,10 @@ class VecSimulator(Simulator):
             self._push(self.now + self.policy.tick_interval, "tick", None)
         elif kind == "unhold":
             self.policy.release_hold(payload)
+        elif kind == "fault":
+            if self._apply_fault(payload):
+                self.done = True        # device dead: event stream ends
+                return False
         self._apply_allocations()
         self.policy.step(self.now)
         if self._startable:

@@ -231,6 +231,23 @@ class Member:
         loop (power capping, migration export/admit).  Leaf members keep
         no cache; a nested coordinator must drop its own."""
 
+    # -- fault domain --------------------------------------------------------
+
+    def failed(self) -> bool:
+        """True once the member is permanently dead (``device_dead`` at the
+        leaf; a nested tier is dead when every leaf below it is)."""
+        return False
+
+    def has_faults(self) -> bool:
+        """True when a fault plan targets this member (forces the
+        coordinator's interleaved loop — detection needs global time)."""
+        return False
+
+    def can_host(self, client) -> bool:
+        """Placement filter for evacuees: False when the client's memory
+        floor (KV cache) cannot fit on this member's surviving capacity."""
+        return True
+
     # -- pressure / placement ----------------------------------------------
 
     def pressure(self) -> Pressure:
@@ -349,6 +366,14 @@ class HierarchyCoordinator:
         #: independently, so member-local state at time t is identical
         #: whether sampled globally or during the member's own run
         self.member_hooks: list = []
+        #: fault domain: evacuate a dead member's tenants automatically
+        #: (the ctl daemon turns this off and drives recovery through its
+        #: own PREEMPT -> REQUEUE job machinery instead)
+        self.auto_evacuate = True
+        self.failed_members: set[int] = set()
+        self.fault_log: list[tuple[float, int]] = []    # (t, member)
+        #: cids left on a dead member because no live destination existed
+        self.stranded: set[int] = set()
         self._started = False
         self._done = False
 
@@ -447,6 +472,64 @@ class HierarchyCoordinator:
         self._dirty_deep(pm.dst)
         self._pending = None
 
+    # -- fault handling ------------------------------------------------------
+
+    def _on_member_failed(self, d: int, now: float):
+        """A member just died: take it out of the interleaved loop, cancel
+        any migration touching it, and (unless the tier above owns
+        recovery) evacuate its tenants to surviving members."""
+        self.failed_members.add(d)
+        self._active.discard(d)
+        self._peek_dirty.add(d)
+        self.fault_log.append((now, d))
+        pm = self._pending
+        if pm is not None and (pm.src == d or pm.dst == d):
+            if pm.src != d and not self.members[pm.src].failed():
+                self.members[pm.src].abort_drain(pm.cid)
+            self._pending = None
+        if self.auto_evacuate:
+            self._evacuate(d, now)
+
+    def _evacuate(self, d: int, now: float):
+        """Move every tenant off dead member ``d``.
+
+        The device_dead fault already REEF-reset in-flight work back onto
+        the launch queues, so every hosted client is drained — export is
+        immediate, no hold/drain phase.  HP evacuees move first (their
+        guarantees re-derive against the fullest destination pools) and
+        each lands on the most-free survivor whose capacity can hold its
+        KV memory floor (``can_host``)."""
+        m = self.members[d]
+        cids = list(m.hosted_cids())
+        if not cids:
+            return
+        dsts = sorted(i for i in self._active
+                      if i != d and i not in self.failed_members
+                      and self.members[i].supports_migration())
+        if not dsts or not m.supports_migration():
+            self.stranded.update(cids)
+            return
+        exports = []
+        for cid in cids:
+            src_now = m.clock(cid)
+            client, priority, state = m.export_client(cid)
+            self.frozen.discard(cid)
+            exports.append((cid, src_now, client, priority, state))
+        exports.sort(key=lambda e: (-int(e[3]), e[0]))   # HP first
+        for cid, src_now, client, priority, state in exports:
+            fit = [i for i in dsts if self.members[i].can_host(client)]
+            cands = fit or dsts
+            dst = max(cands, key=lambda i: (
+                self.members[i].pressure().free_frac, -i))
+            self.members[dst].admit_client(
+                client, priority, state, after=src_now,
+                release_at=now + self.config.migration_cost)
+            self.ledger.migrate(cid, dst, now)
+            self._last_move[cid] = now
+            self.migration_log.append((now, cid, d, dst))
+            self._dirty_deep(dst)
+        self._dirty_deep(d)
+
     # -- invariants ----------------------------------------------------------
 
     def check(self) -> bool:
@@ -531,6 +614,8 @@ class HierarchyCoordinator:
         if not self.members[d].step_event():
             self._active.discard(d)
         self._peek_dirty.add(d)         # own step: internal caches are fine
+        if d not in self.failed_members and self.members[d].failed():
+            self._on_member_failed(d, t)
         if self._migrate:
             self._maybe_execute(d)
         if not self._active:
@@ -547,7 +632,8 @@ class HierarchyCoordinator:
     def _needs_interleave(self) -> bool:
         cfg = self.config
         return bool((cfg.migration and len(self.members) > 1)
-                    or self.epoch_hooks)
+                    or self.epoch_hooks
+                    or any(m.has_faults() for m in self.members))
 
     def run_loop(self):
         """Run every member to completion.  Uncoupled tiers (migration off,

@@ -119,7 +119,8 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
              cluster_config: Optional[ClusterConfig] = None,
              placement: Optional[list] = None,
              engine: Optional[str] = None,
-             collect_records: bool = True):
+             collect_records: bool = True,
+             faults=None):
     """Run one system over one workload mix.
 
     ``device`` may be a :class:`DeviceSpec` (single-device path, returns a
@@ -138,7 +139,11 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
     ``engine`` picks the simulator core ("ref" | "vec"; default from
     :func:`default_engine`) — results are bit-for-bit identical, "vec" is
     faster.  ``collect_records=False`` drops per-kernel records (throughput
-    benchmarks on huge traces)."""
+    benchmarks on huge traces).
+
+    ``faults`` is a :class:`~repro.core.types.FaultPlan`; its ``member``
+    indices address flat device positions (0 for a bare DeviceSpec).
+    ``faults=None`` is bit-for-bit the fault-free run."""
     if engine is None:
         engine = default_engine()
     if isinstance(device, ClusterSpec):
@@ -151,7 +156,8 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
                                 router=router,
                                 cluster_config=cluster_config,
                                 placement=placement, engine=engine,
-                                collect_records=collect_records)
+                                collect_records=collect_records,
+                                faults=faults)
     if cluster_config is not None:
         raise ValueError("cluster_config requires a ClusterSpec")
     if isinstance(device, NodeSpec):
@@ -160,14 +166,17 @@ def evaluate(system: str, device, apps: list[AppSpec], *,
                              seed=seed, lithos_config=lithos_config,
                              router=router, node_config=node_config,
                              placement=placement, engine=engine,
-                             collect_records=collect_records)
+                             collect_records=collect_records,
+                             faults=faults)
     if node_config is not None or placement is not None:
         raise ValueError("node_config/placement require a NodeSpec — a bare "
                          "DeviceSpec has no node layer to apply them to")
     policy = make_policy(system, device, apps, lithos_config=lithos_config)
     sim = make_simulator(device, apps, policy, engine=engine,
                          horizon=horizon, seed=seed,
-                         collect_records=collect_records)
+                         collect_records=collect_records,
+                         faults=(faults.events_for(0)
+                                 if faults is not None else ()))
     res = sim.run()
     res.policy = policy               # expose learned state to benchmarks
     return res

@@ -55,8 +55,8 @@ from repro.core.hierarchy import (ROUTERS, HierarchyCoordinator, Member,
 from repro.core.simulator import (Policy, SimResult, Simulator,
                                   make_simulator)
 from repro.core.slices import MemberLedger
-from repro.core.types import NodeConfig, NodeSpec, Priority
-from repro.core.workloads import AppSpec, mean_demand
+from repro.core.types import FaultPlan, NodeConfig, NodeSpec, Priority
+from repro.core.workloads import AppSpec, kv_floor_slices, mean_demand
 
 _Pressure = Pressure                # historical name
 
@@ -128,9 +128,30 @@ class SimMember(Member):
     def done(self) -> bool:
         return self.sim.done
 
+    # -- fault domain --------------------------------------------------------
+
+    def failed(self) -> bool:
+        return getattr(self.sim, "dead", False)
+
+    def has_faults(self) -> bool:
+        return bool(getattr(self.sim, "_fault_events", ()))
+
+    def can_host(self, client) -> bool:
+        """A decode tenant's KV memory floor must fit on the surviving
+        (non-retired) capacity — evacuation never lands a tenant where its
+        live cache cannot."""
+        if self.failed():
+            return False
+        surviving = self.sim.device.n_slices - self.sim.n_retired
+        floor = kv_floor_slices(client.spec.cfg, self.sim.device,
+                                getattr(client, "kv_bytes", 0.0))
+        return floor <= surviving
+
     # -- pressure / placement ----------------------------------------------
 
     def _free(self) -> int:
+        if self.failed():
+            return 0                    # a dead device lends nothing
         sm = getattr(self.policy, "slices", None)
         if sm is not None:
             cnt = sm.counts()
@@ -302,7 +323,9 @@ def build_node(system: str, node: NodeSpec, apps: list[AppSpec],
                placement: list[int], *, horizon: float, seed: int = 0,
                lithos_config=None, node_config: Optional[NodeConfig] = None,
                engine: str = "ref", collect_records: bool = True,
-               cids: Optional[list[int]] = None) -> NodeCoordinator:
+               cids: Optional[list[int]] = None,
+               faults: Optional[FaultPlan] = None,
+               fault_base: int = 0) -> NodeCoordinator:
     """Construct one node's simulators + policies and wrap them in a
     :class:`NodeCoordinator` (not yet run).
 
@@ -310,7 +333,12 @@ def build_node(system: str, node: NodeSpec, apps: list[AppSpec],
     tier passes cluster-global ids so tenants keep their workload streams
     under any node assignment); default is app order, the node-global ids
     ``evaluate_node`` has always used.  With explicit cids the coordinator's
-    ledger is keyed by those ids (a dict placement)."""
+    ledger is keyed by those ids (a dict placement).
+
+    ``faults`` is a :class:`FaultPlan` whose ``member`` indices address
+    flat device positions; ``fault_base`` is this node's offset into that
+    flat numbering (the cluster tier passes the device count of the nodes
+    before it)."""
     from repro.core.lithos import make_policy
 
     assert len(placement) == len(apps) and \
@@ -326,7 +354,9 @@ def build_node(system: str, node: NodeSpec, apps: list[AppSpec],
                              lithos_config=lithos_config, cids=idx)
         sim = make_simulator(dev, dev_apps, policy, engine=engine,
                              horizon=horizon, seed=seed, cids=idx,
-                             collect_records=collect_records)
+                             collect_records=collect_records,
+                             faults=(faults.events_for(fault_base + d)
+                                     if faults is not None else ()))
         sims.append(sim)
         policies.append(policy)
     ledger_placement = (list(placement) if cids is None else
@@ -341,7 +371,8 @@ def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
                   node_config: Optional[NodeConfig] = None,
                   placement: Optional[list[int]] = None,
                   engine: str = "ref",
-                  collect_records: bool = True) -> NodeResult:
+                  collect_records: bool = True,
+                  faults: Optional[FaultPlan] = None) -> NodeResult:
     """Route ``apps`` across the node and run one simulator + policy
     instance per device as interleaved event streams under a
     :class:`NodeCoordinator`.  With migration disabled (the default
@@ -357,7 +388,7 @@ def evaluate_node(system: str, node: NodeSpec, apps: list[AppSpec], *,
     coord = build_node(system, node, apps, list(placement), horizon=horizon,
                        seed=seed, lithos_config=lithos_config,
                        node_config=node_config, engine=engine,
-                       collect_records=collect_records)
+                       collect_records=collect_records, faults=faults)
     results = coord.run()
     return NodeResult(node, router, list(placement), results,
                       coord.policies, coordinator=coord)

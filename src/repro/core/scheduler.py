@@ -95,6 +95,10 @@ class LithOSScheduler(Policy):
         # scheduled unhold (e.g. the migration-cost release of an earlier
         # move) must not cancel a newer drain-hold on the same client.
         self._held: dict[int, int] = {}
+        # elastic re-own debt: evacuated owners whose guarantee could not
+        # be fully re-granted at admit (destination pool busy) — fulfilled
+        # from pool slices as they free up at completions
+        self._pending_reown: dict[int, int] = {}
 
     def attach(self, sim):
         super().attach(sim)
@@ -391,6 +395,108 @@ class LithOSScheduler(Policy):
             qs.parent = None
             ek.client.kernel_done(now)
         self._sync_disp(ek.client.cid, qs)
+        if self._pending_reown:
+            self._fulfill_reowns()
+
+    # -- fault handling ------------------------------------------------------
+
+    def on_fault(self, f, now: float):
+        if f.kind == "slice_retired":
+            self._retire_slice(f.slice_id, now)
+            return
+        if f.kind != "device_dead":
+            return
+        # device dead: REEF-reset every in-flight atom, put each planned
+        # parent kernel back at its queue head — the tier above evacuates
+        # intact queues, nothing is silently lost.  Atom kids are discarded
+        # (the destination re-plans and re-atomizes with fresh ids).
+        for kid in list(self.sim.in_flight):
+            self._grown.pop(kid, None)
+            self.slices.release(kid, now)
+            self.sim.kill(kid)
+        for cid, qs in self.qstate.items():
+            if qs.parent is None:
+                continue
+            c = self.sim.client_by_id.get(cid)
+            if c is not None:
+                c.requeue(qs.parent)
+            qs.parent = None
+            qs.atoms.clear()
+            qs.in_flight_kid = None
+            qs.parent_slices = 0
+            qs.predicted = None
+            self._sync_disp(cid, qs)
+        self._grown = {}
+
+    def _retire_slice(self, sid: int, now: float):
+        """ECC-style loss of one slice: out of the free-lists forever (lazily
+        if held — blocks are non-preemptible), and the owner's quota shrinks
+        by one so the guarantee tracks the hardware that still exists.  The
+        KV memory floor is unaffected: it binds the right-sizer's *shrink*
+        paths, and dispatch clamps to whatever capacity survives."""
+        owner = self.slices.owner[sid]
+        self.slices.retire(sid)
+        if owner is not None:
+            q = self.quotas.get(owner)
+            if q is not None and q.slices > 0:
+                self.quotas[owner] = Quota(q.slices - 1, q.priority)
+
+    def _fair_hp_share(self) -> int:
+        """Per-HP-owner fair share of the surviving capacity — the quota
+        re-derivation target when an evacuee's guarantee must squeeze into
+        an already-partitioned destination."""
+        alive = self.device.n_slices - len(self.slices.retired)
+        n_hp = sum(1 for q in self.quotas.values()
+                   if q.priority == Priority.HIGH)
+        return alive // max(1, n_hp)
+
+    def _grant_reown(self, cid: int, want: int) -> int:
+        """Re-grant up to ``want`` slices of ownership to an evacuee: idle
+        pool slices first (free capacity), then — up to the fair HP share —
+        idle slices reclaimed from HP owners holding more than that share.
+        Grows ``cid``'s quota by what was actually granted."""
+        granted = 0
+        for sid in self.slices.idle_pool()[:want]:
+            self.slices.assign_owner(sid, cid)
+            granted += 1
+        if granted < want:
+            fair = self._fair_hp_share()
+            have = self.quotas.get(cid, Quota(0)).slices + granted
+            room = min(want - granted, max(0, fair - have))
+            if room:
+                granted += self._reclaim_from_rich(cid, room, fair)
+        if granted:
+            q = self.quotas.get(cid, Quota(0))
+            self.quotas[cid] = Quota(q.slices + granted, q.priority)
+        return granted
+
+    def _reclaim_from_rich(self, cid: int, want: int, fair: int) -> int:
+        """Transfer idle slices from HP owners above the fair share to the
+        re-owning evacuee (held slices transfer later, as they free)."""
+        got = 0
+        for o in sorted(self.quotas):
+            if o == cid or got >= want:
+                continue
+            q = self.quotas[o]
+            if q.priority != Priority.HIGH or q.slices <= fair:
+                continue
+            take = min(q.slices - fair, want - got)
+            ids = self.slices.idle_owned(o)[:take]
+            for sid in ids:
+                self.slices.assign_owner(sid, cid)
+            if ids:
+                self.quotas[o] = Quota(q.slices - len(ids), q.priority)
+                got += len(ids)
+        return got
+
+    def _fulfill_reowns(self):
+        for cid in sorted(self._pending_reown):
+            want = self._pending_reown[cid]
+            got = self._grant_reown(cid, want)
+            if got >= want:
+                del self._pending_reown[cid]
+            else:
+                self._pending_reown[cid] = want - got
 
     # -- cross-device migration protocol (node-level lending, §4.3 scaled
     # -- out: the NodeCoordinator drives hold -> drain -> export / import) --
@@ -421,17 +527,40 @@ class LithOSScheduler(Policy):
         self._held.pop(cid, None)       # all holds die with the residency
         self._disp.discard(cid)
         quota = self.quotas.pop(cid, Quota(0))
+        # elastic re-own (HP migration): a drained owner's slices are all
+        # idle — return them to this device's pool and record how many, so
+        # the destination re-derives an equivalent grant from its own pool
+        reown = self._pending_reown.pop(cid, 0)
+        for sid in self.slices.idle_owned(cid):
+            self.slices.disown(sid)
+            reown += 1
         assert self.slices.owned_by(cid) == 0, \
-            "only quota-less (BE) clients migrate; slice ownership is static"
+            "cannot export an owner while borrowers hold its slices"
         keys = [k for k in self.predictor.nodes if k[0] == cid]
         nodes = {k: self.predictor.nodes.pop(k) for k in keys}
-        return {"quota": quota, "predictor_nodes": nodes}
+        return {"quota": quota, "predictor_nodes": nodes, "reown": reown}
 
     def import_client_state(self, cid: int, priority, state: dict):
-        """Admit a migrated client: BE quota (it runs on stolen capacity)
-        plus the source predictor's observations, so the first kernels on
-        the new device dispatch with warm latency estimates."""
-        self.quotas[cid] = state.get("quota") or Quota(0, priority)
+        """Admit a migrated client: its quota re-derived against this
+        device's idle pool (elastic re-own — an HP tenant re-acquires up to
+        its exported ownership, a BE tenant stays quota-less on stolen
+        capacity), plus the source predictor's observations so the first
+        kernels on the new device dispatch with warm latency estimates."""
+        quota = state.get("quota") or Quota(0, priority)
+        reown = int(state.get("reown", 0) or 0)
+        if reown:
+            self.quotas[cid] = Quota(0, quota.priority)
+            granted = self._grant_reown(cid, reown)
+            if granted < reown:
+                # outstanding debt is capped at the fair share: the
+                # evacuee is entitled to free capacity without limit but
+                # squeezes other guarantees only down to parity
+                debt = min(reown - granted,
+                           max(0, self._fair_hp_share() - granted))
+                if debt:
+                    self._pending_reown[cid] = debt
+        else:
+            self.quotas[cid] = quota
         for k, v in state.get("predictor_nodes", {}).items():
             self.predictor.nodes[k] = v
 

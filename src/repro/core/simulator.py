@@ -121,6 +121,26 @@ class Policy:
     def on_tick(self, now: float):
         pass
 
+    def on_fault(self, f, now: float):
+        """React to an injected :class:`~repro.core.types.FaultEvent` on
+        this device (simulator callback; never called on fault-free runs).
+
+        ``device_dead`` contract: when this returns, nothing may remain in
+        flight — the generic implementation REEF-kills every in-flight
+        kernel and puts its task back at the owning client's queue head,
+        so the tier above can evacuate intact launch queues.
+        ``slice_retired`` is a no-op here (policies without slice
+        ownership see the shrink through ``sim.free_slices``);
+        ownership-aware policies override (LithOSScheduler retires the
+        slice in its SliceMap and shrinks the owner's quota)."""
+        if f.kind != "device_dead":
+            return
+        for kid in list(self.sim.in_flight):
+            ek = self.sim.in_flight[kid]
+            task = self.sim.kill(kid)
+            if task is not None and not task.is_atom:
+                ek.client.requeue(task)
+
     # -- migration protocol (node-level lending; no-ops by default) ---------
 
     def hold_client(self, cid: int):
@@ -163,7 +183,8 @@ class Simulator:
     def __init__(self, device: DeviceSpec, apps: list[AppSpec],
                  policy: Policy, *, horizon: float = 30.0, seed: int = 0,
                  cids: Optional[list[int]] = None,
-                 collect_records: bool = True):
+                 collect_records: bool = True,
+                 faults=()):
         """``cids`` gives each app an explicit client id (default 0..n-1).
         The node layer passes node-global ids so a tenant keeps the same id
         (and hence the same workload random stream) under any placement.
@@ -189,6 +210,13 @@ class Simulator:
         self.records: list[CompletionRecord] = []
         self.collect_records = collect_records
         self.done = False
+        # Injected hardware faults (FaultEvents targeting this device).
+        # Empty on fault-free runs: zero extra heap events, so behavior is
+        # bit-for-bit identical to a build without fault support.
+        self._fault_events = tuple(faults or ())
+        self.dead = False               # device_dead fired
+        self.n_retired = 0              # slices lost to slice_retired
+        self.fault_log: list = []       # (t, FaultEvent) as applied
         # arrival-stream generation per client: bumped on detach so stale
         # arrival events left in the heap are ignored if the client returns
         self._arr_gen: dict[int, int] = {}
@@ -303,7 +331,34 @@ class Simulator:
         return sum(ek.slices for ek in self.in_flight.values())
 
     def free_slices(self) -> int:
-        return max(0, self.device.n_slices - self.held_slices())
+        return max(0, self.device.n_slices - self.n_retired
+                   - self.held_slices())
+
+    # -- fault injection ---------------------------------------------------------
+
+    def _apply_fault(self, f) -> bool:
+        """Apply one injected FaultEvent.  Returns True when the fault
+        permanently kills the device (the caller ends the event stream)."""
+        self.fault_log.append((self.now, f))
+        if f.kind == "transient_stall":
+            # SXid-style hiccup: every in-flight kernel stalls for
+            # ``duration`` wall seconds (modeled as extra overhead phase)
+            for ek in self.in_flight.values():
+                ek.overhead_left += f.duration
+                self._schedule_completion(ek)
+            return False
+        if f.kind == "slice_retired":
+            self.n_retired += 1
+            self.policy.on_fault(f, self.now)
+            return False
+        # device_dead: the policy resets in-flight work back onto the
+        # clients' launch queues (REEF kill semantics) so the tier above
+        # can evacuate intact queues; then the device stops for good.
+        self.policy.on_fault(f, self.now)
+        assert not self.in_flight, \
+            "policy.on_fault(device_dead) must clear all in-flight work"
+        self.dead = True
+        return True
 
     def _complete(self, ek: ExecKernel):
         del self.in_flight[ek.task.kid]
@@ -368,6 +423,8 @@ class Simulator:
         if self.policy.tick_interval > 0:
             self._push(self.policy.tick_interval, "tick", None)
         self._push(self.horizon, "end", None)
+        for f in self._fault_events:
+            self._push(f.t, "fault", f)
 
     def peek_time(self) -> Optional[float]:
         """Timestamp of the next pending event (None when finished)."""
@@ -414,6 +471,10 @@ class Simulator:
             self._push(self.now + self.policy.tick_interval, "tick", None)
         elif kind == "unhold":
             self.policy.release_hold(payload)
+        elif kind == "fault":
+            if self._apply_fault(payload):
+                self.done = True        # device dead: event stream ends
+                return False
         # policy reacts to the new state (apply first so context
         # switches / grows take effect before dispatch decisions)
         self._apply_allocations()

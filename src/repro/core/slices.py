@@ -70,6 +70,11 @@ class SliceMap:
         self._idle_own: dict[int, set[int]] = {}
         self._idle_pool: set[int] = set(range(n_slices))
         self._held_by_kid: dict[int, list[int]] = {}
+        # ECC-retired slices: permanently out of every free-list (fault
+        # injection).  A held slice retires lazily at its release — blocks
+        # are non-preemptible, so the in-flight kernel finishes first.
+        self.retired: set[int] = set()
+        self._pending_retire: set[int] = set()
         # steal/lend accounting
         self.ledger: list[LendRecord] = []
         self._open_lends: dict[tuple[int, int], LendRecord] = {}  # (kid, sid)
@@ -132,6 +137,34 @@ class SliceMap:
         if not s and self.owned_by(old) == 0:
             del self._idle_own[old]
         self._idle_pool.add(sid)
+
+    def retire(self, sid: int) -> bool:
+        """Permanently remove a slice from service (ECC-style fault).
+
+        An idle slice retires immediately; a held one is marked and
+        retires when its holding kernel releases it (non-preemptible
+        blocks finish first).  Returns True once the slice is out of
+        service, False while the retire is pending on a release."""
+        if sid in self.retired:
+            return True
+        if self.holder[sid] is not None:
+            self._pending_retire.add(sid)
+            return False
+        self._do_retire(sid)
+        return True
+
+    def _do_retire(self, sid: int):
+        o = self.owner[sid]
+        if o is None:
+            self._idle_pool.discard(sid)
+        else:
+            s = self._idle_own[o]
+            s.discard(sid)
+            self.owner[sid] = None
+            if not s and self.owned_by(o) == 0:
+                del self._idle_own[o]
+        self.owner[sid] = None
+        self.retired.add(sid)
 
     # -- queries (incremental free-lists) ------------------------------------
 
@@ -238,6 +271,9 @@ class SliceMap:
             if rec is not None:
                 rec.t_end = now
                 self.lent_slice_seconds += rec.duration
+            if sid in self._pending_retire:
+                self._pending_retire.discard(sid)
+                self._do_retire(sid)
         return tuple(freed)
 
     def note_stolen_completion(self, latency: float, slices: int):
@@ -252,12 +288,13 @@ class SliceMap:
         owned_idle = sum(len(v) for v in self._idle_own.values())
         return {"owned_idle": owned_idle, "pool_idle": len(self._idle_pool),
                 "held": held,
-                "lent": sum(1 for r in self.ledger if r.open)}
+                "lent": sum(1 for r in self.ledger if r.open),
+                "retired": len(self.retired)}
 
     def check(self):
-        """Conservation: idle ∪ held partitions [0, n_slices); no slice is
-        held twice; free-lists agree with the holder array; open ledger
-        entries match currently-held stolen slices."""
+        """Conservation: idle ∪ held ∪ retired partitions [0, n_slices); no
+        slice is held twice; free-lists agree with the holder array; open
+        ledger entries match currently-held stolen slices."""
         held: set[int] = set()
         for kid, ids in self._held_by_kid.items():
             for sid in ids:
@@ -275,8 +312,12 @@ class SliceMap:
             assert sid not in idle
             idle.add(sid)
         assert not (held & idle), held & idle
-        assert len(held) + len(idle) == self.n_slices, (
-            len(held), len(idle), self.n_slices)
+        for sid in self.retired:
+            assert self.holder[sid] is None and self.owner[sid] is None, sid
+            assert sid not in held and sid not in idle, sid
+        assert self._pending_retire <= held, (self._pending_retire, held)
+        assert len(held) + len(idle) + len(self.retired) == self.n_slices, (
+            len(held), len(idle), len(self.retired), self.n_slices)
         for sid in idle:
             assert self.holder[sid] is None, sid
         open_lends = {(r.kid, r.slice_id) for r in self.ledger if r.open}
@@ -330,6 +371,8 @@ class VecSliceMap:
         self._idle_pool: int = (1 << n_slices) - 1 if n_slices else 0
         self._n_idle = n_slices
         self._held_by_kid: dict[int, list[int]] = {}
+        self.retired: set[int] = set()
+        self._pending_retire: set[int] = set()
         self._open_lends: dict[tuple[int, int], tuple[int, int, float]] = {}
         # (kid, sid) -> (owner, borrower, t_start)
         self.lent_slice_seconds = 0.0
@@ -395,6 +438,34 @@ class VecSliceMap:
         self._idle_owned_union &= ~bit
         self._idle_pool |= bit
         self._owners_sorted = None
+
+    def retire(self, sid: int) -> bool:
+        """See :meth:`SliceMap.retire` — same lazy-on-held semantics on the
+        bitmask free-lists."""
+        if sid in self.retired:
+            return True
+        if self.holder[sid] is not None:
+            self._pending_retire.add(sid)
+            return False
+        self._do_retire(sid)
+        return True
+
+    def _do_retire(self, sid: int):
+        bit = 1 << sid
+        o = self.owner[sid]
+        if o is None:
+            self._idle_pool &= ~bit
+        else:
+            self._idle_own[o] &= ~bit
+            self._own_mask[o] &= ~bit
+            if not self._own_mask[o]:
+                del self._idle_own[o]
+                del self._own_mask[o]
+            self._idle_owned_union &= ~bit
+            self._owners_sorted = None
+        self.owner[sid] = None
+        self._n_idle -= 1
+        self.retired.add(sid)
 
     # -- queries -------------------------------------------------------------
 
@@ -543,6 +614,11 @@ class VecSliceMap:
         self._idle_owned_union = union
         self.lent_slice_seconds = lent
         self._n_idle += len(freed)
+        if self._pending_retire:
+            for sid in freed:
+                if sid in self._pending_retire:
+                    self._pending_retire.discard(sid)
+                    self._do_retire(sid)
         return tuple(freed)
 
     def note_stolen_completion(self, latency: float, slices: int):
@@ -554,8 +630,10 @@ class VecSliceMap:
         owned_idle = sum(m.bit_count() for m in self._idle_own.values())
         pool_idle = self._idle_pool.bit_count()
         return {"owned_idle": owned_idle, "pool_idle": pool_idle,
-                "held": self.n_slices - owned_idle - pool_idle,
-                "lent": len(self._open_lends)}
+                "held": (self.n_slices - owned_idle - pool_idle
+                         - len(self.retired)),
+                "lent": len(self._open_lends),
+                "retired": len(self.retired)}
 
     def check(self):
         held: set[int] = set()
@@ -575,8 +653,12 @@ class VecSliceMap:
             assert sid not in idle
             idle.add(sid)
         assert not (held & idle), held & idle
-        assert len(held) + len(idle) == self.n_slices, (
-            len(held), len(idle), self.n_slices)
+        for sid in self.retired:
+            assert self.holder[sid] is None and self.owner[sid] is None, sid
+            assert sid not in held and sid not in idle, sid
+        assert self._pending_retire <= held, (self._pending_retire, held)
+        assert len(held) + len(idle) + len(self.retired) == self.n_slices, (
+            len(held), len(idle), len(self.retired), self.n_slices)
         assert len(idle) == self._n_idle, (len(idle), self._n_idle)
         for sid in idle:
             assert self.holder[sid] is None, sid

@@ -230,6 +230,72 @@ class ClusterConfig:
     node_config: Optional[NodeConfig] = None  # per-node coordinator knobs
 
 
+#: fault kinds a :class:`FaultPlan` may schedule
+FAULT_KINDS = ("device_dead", "slice_retired", "transient_stall")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One injected hardware fault, scheduled at simulated time ``t``.
+
+    ``member`` is a flat leaf-device index at whatever scope the plan is
+    handed to (device 0 for a bare :class:`DeviceSpec` run, the node's
+    device index for a :class:`NodeSpec`, the cluster-flat device index for
+    a :class:`ClusterSpec`).
+
+    Kinds:
+      * ``device_dead``     — the whole device fails permanently; its
+        tenants must be evacuated by the tier above.
+      * ``slice_retired``   — ECC-style loss of one TPC slice
+        (``slice_id``); the device keeps running at reduced capacity.
+      * ``transient_stall`` — every in-flight kernel on the device is
+        delayed by ``duration`` seconds (SXid-style recoverable hiccup).
+    """
+
+    t: float
+    kind: str
+    member: int = 0
+    slice_id: int = -1              # slice_retired only
+    duration: float = 0.0           # transient_stall only
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(choose from {FAULT_KINDS})")
+        if self.t < 0.0:
+            raise ValueError(f"fault time must be >= 0, got {self.t}")
+        if self.kind == "slice_retired" and self.slice_id < 0:
+            raise ValueError("slice_retired needs a slice_id")
+        if self.kind == "transient_stall" and not self.duration > 0.0:
+            raise ValueError("transient_stall needs a duration > 0")
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of :class:`FaultEvent`s.
+
+    The plan is the single source of failure truth for a run: the same
+    plan replayed against either simulator engine injects byte-identical
+    event streams.  An empty plan is the no-fault contract — zero extra
+    heap events, bit-for-bit identical to a run with no plan at all."""
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def events_for(self, member: int) -> tuple[FaultEvent, ...]:
+        """This plan's events targeting one flat device index, time-sorted
+        (ties kept in plan order — deterministic)."""
+        return tuple(sorted((e for e in self.events if e.member == member),
+                            key=lambda e: e.t))
+
+    @property
+    def dead_members(self) -> tuple[int, ...]:
+        return tuple(sorted({e.member for e in self.events
+                             if e.kind == "device_dead"}))
+
+
 _kernel_ids = itertools.count()
 
 

@@ -22,7 +22,7 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.types import KernelWork, Priority
+from repro.core.types import FaultEvent, FaultPlan, KernelWork, Priority
 
 DSIZE = 2               # bf16
 TILE_M = TILE_N = 128   # matmul output tile per thread block
@@ -336,6 +336,51 @@ def kv_floor_slices(cfg: ArchConfig, device, total_kv_bytes: float) -> int:
     if cap <= 0.0:
         return 1
     return min(device.n_slices, max(1, math.ceil(total_kv_bytes / cap)))
+
+
+# ---------------------------------------------------------------------------
+# Fault schedules (deterministic, seeded — the injection input to the
+# fault-domain layer; see DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def fault_schedule(n_devices: int, horizon: float, *, seed: int = 0,
+                   n_device_dead: int = 0, n_slice_retired: int = 0,
+                   n_transient: int = 0, slices_per_device: int = 1,
+                   t_min_frac: float = 0.2, t_max_frac: float = 0.8,
+                   stall_lo: float = 5e-3, stall_hi: float = 50e-3
+                   ) -> FaultPlan:
+    """Seeded random :class:`FaultPlan` over ``n_devices`` flat device
+    positions — the generator benchmarks and property tests share.
+
+    Fault times are uniform in ``[t_min_frac, t_max_frac] * horizon`` (the
+    middle of the run, so there is work to disrupt and time to recover).
+    Device deaths pick distinct devices; ``slice_retired`` and
+    ``transient_stall`` events land on the *surviving* devices when any
+    exist (faulting a device that is already scheduled to die tests
+    nothing).  Deterministic in all arguments."""
+    assert n_devices >= 1 and horizon > 0.0
+    rng = np.random.default_rng((int(seed), n_devices, n_device_dead,
+                                 n_slice_retired, n_transient))
+    t = lambda: float(rng.uniform(t_min_frac, t_max_frac) * horizon)
+    events: list[FaultEvent] = []
+    n_dead = min(n_device_dead, n_devices)
+    dead = sorted(rng.choice(n_devices, size=n_dead, replace=False).tolist()) \
+        if n_dead else []
+    for d in dead:
+        events.append(FaultEvent(t=t(), kind="device_dead", member=int(d)))
+    survivors = [d for d in range(n_devices) if d not in set(dead)]
+    targets = survivors or list(range(n_devices))
+    for _ in range(n_slice_retired):
+        d = int(targets[rng.integers(len(targets))])
+        sid = int(rng.integers(slices_per_device))
+        events.append(FaultEvent(t=t(), kind="slice_retired", member=d,
+                                 slice_id=sid))
+    for _ in range(n_transient):
+        d = int(targets[rng.integers(len(targets))])
+        events.append(FaultEvent(t=t(), kind="transient_stall", member=d,
+                                 duration=float(rng.uniform(stall_lo,
+                                                            stall_hi))))
+    return FaultPlan(tuple(sorted(events, key=lambda e: (e.t, e.member))))
 
 
 # ---------------------------------------------------------------------------

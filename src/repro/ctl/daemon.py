@@ -34,6 +34,7 @@ contract a driver-level GPU control plane can honor.
 from __future__ import annotations
 
 import dataclasses
+import os
 import signal
 import time
 from dataclasses import dataclass, field
@@ -43,7 +44,8 @@ import numpy as np
 
 from repro.core.node import build_node
 from repro.core.queues import Client
-from repro.core.types import DeviceSpec, NodeConfig, NodeSpec, Priority, Quota
+from repro.core.types import (DeviceSpec, FaultPlan, NodeConfig, NodeSpec,
+                              Priority, Quota)
 from repro.core.workloads import AppSpec
 from repro.ctl import store
 from repro.ctl.state import Job, JobEvent, JobState
@@ -79,6 +81,8 @@ class DaemonConfig:
     epoch: float = 0.25             # pressure-sampling period
     validate: bool = False          # cross-device conservation checks
     heartbeat_interval: float = 0.2
+    fault_plan: Optional[FaultPlan] = None  # injected device/slice failures
+    compact_threshold_bytes: int = 512 * 1024   # journal size trigger (0=off)
 
     def node(self) -> NodeSpec:
         if self.device not in DEVICE_PROFILES:
@@ -185,7 +189,13 @@ class ControlPlane:
             seed=self.cfg.seed, engine=engine,
             node_config=NodeConfig(migration=self.cfg.migration,
                                    epoch=self.cfg.epoch,
-                                   validate=self.cfg.validate))
+                                   validate=self.cfg.validate),
+            faults=self.cfg.fault_plan)
+        # the daemon owns fault handling: jobs on a dead device take the
+        # journaled PREEMPT -> REQUEUE path and re-admit onto surviving
+        # capacity, instead of the coordinator's in-sim evacuation
+        self.coord.auto_evacuate = False
+        self._dead: set[int] = set()
         self.coord.start()
         self._rt: dict[str, _Runtime] = {}
         self._by_cid: dict[int, str] = {}
@@ -243,7 +253,19 @@ class ControlPlane:
     # -- inbox ---------------------------------------------------------------
 
     def _ingest(self):
-        submits, cancels, drain = store.scan_inbox(self.state_dir)
+        submits, cancels, drain, rejected = store.scan_inbox(self.state_dir)
+        for r in rejected:
+            # the file is already quarantined in inbox/rejected/; if the
+            # filename still identifies a submit's job id, record the loss
+            # so the submitter sees FAILED instead of a job that vanished
+            jid = r.get("job_id")
+            if jid and r["kind"] == "submit" and jid not in self.jobs:
+                self.journal.append(jid, store.SUBMIT, spec={},
+                                    to=JobState.QUEUED.value)
+                job = Job(job_id=jid, spec={})
+                self.jobs[jid] = job
+                self._event(job, JobEvent.FAIL,
+                            error=f"rejected spool file: {r['reason']}")
         for s in submits:
             jid = s["job_id"]
             if jid not in self.jobs:        # crash between journal+unlink:
@@ -280,11 +302,12 @@ class ControlPlane:
 
     def _headroom(self, d: int) -> int:
         return (self.node.devices[d].n_slices
+                - getattr(self.coord.sims[d], "n_retired", 0)
                 - sum(self._reserved[d].values()))
 
     def _pick_device(self, want: int) -> Optional[int]:
         fits = [d for d in range(self.node.n_devices)
-                if self._headroom(d) >= want]
+                if d not in self._dead and self._headroom(d) >= want]
         if not fits:
             return None
         # fewest live jobs first, then most headroom — deterministic
@@ -435,6 +458,58 @@ class ControlPlane:
                 # drain aborted (e.g. horizon/dead) — land back in place
                 self._event(job, JobEvent.LAND, device=job.device)
 
+    # -- fault observation ---------------------------------------------------
+
+    def _observe_faults(self):
+        """Map device loss onto the job state machine: every job bound to a
+        newly failed device is detached from the dead data plane, journaled
+        ``PREEMPT`` (with a fault record naming the device) then
+        ``REQUEUE``, and re-admitted onto surviving capacity by the normal
+        admission pass — never silently lost.  A cancel already in flight
+        wins over the requeue."""
+        for d in sorted(self.coord.failed_members - self._dead):
+            self._dead.add(d)
+            lost = sorted(
+                jid for jid, rt in self._rt.items()
+                if self.coord.ledger.current.get(rt.cid, rt.job.device) == d)
+            # standalone fault record: replay/compact pass it through (its
+            # job id never matches a real job), so the loss stays on the
+            # permanent record even after the jobs finish elsewhere
+            self.journal.append(f"device-{d}", "fault", device=d,
+                                sim_now=self.sim_now(), jobs=lost)
+            for jid in lost:
+                rt = self._rt.pop(jid)
+                job, cid = rt.job, rt.cid
+                sim = self.coord.sims[d]
+                # the device's own scheduler already killed its in-flight
+                # work (Policy.on_fault); here we retire the control-plane
+                # bindings.  Ownership may be spread across devices after a
+                # migration, so sweep every live slice map.
+                for p in self.coord.policies:
+                    sm = getattr(p, "slices", None)
+                    if sm is None:
+                        continue
+                    for sid in rt.granted:
+                        if (sid < sm.n_slices and sm.owner[sid] == cid
+                                and sm.holder[sid] is None):
+                            sm.disown(sid)
+                policy = self.coord.policies[d]
+                if cid in getattr(policy, "quotas", ()):
+                    policy.export_client_state(cid)     # discard: dead plane
+                sim.detach_client(cid)
+                self.coord.ledger.drop(cid, sim.now)
+                self.coord._dirty_deep(d)
+                self.coord.frozen.discard(cid)
+                self._by_cid.pop(cid, None)
+                self._unreserve(jid)
+                if rt.teardown == JobEvent.CANCEL:
+                    self._event(job, JobEvent.CANCEL,
+                                fault={"device": d, "sim_now": sim.now})
+                    continue
+                self._event(job, JobEvent.PREEMPT,
+                            fault={"device": d, "sim_now": sim.now})
+                self._event(job, JobEvent.REQUEUE)
+
     # -- teardown / reaping --------------------------------------------------
 
     def _begin_teardown(self, rt: _Runtime, reason: JobEvent):
@@ -531,9 +606,27 @@ class ControlPlane:
         self._admit_queued()
         stepped = self._step()
         self._observe_migrations()
+        self._observe_faults()
         self._reap()
         self._heartbeat()
+        self._maybe_compact()
         return stepped
+
+    def _maybe_compact(self):
+        """Bound journal growth: when the file crosses the size threshold,
+        collapse terminal jobs' histories to snapshots (atomic rewrite) and
+        reopen the journal at the renumbered tail."""
+        if self.cfg.compact_threshold_bytes <= 0:
+            return
+        try:
+            size = os.path.getsize(self.journal.path)
+        except OSError:
+            return
+        if size < self.cfg.compact_threshold_bytes:
+            return
+        self.journal.close()
+        store.compact(self.state_dir)
+        self.journal = Journal(self.state_dir)
 
     def idle(self) -> bool:
         """True when there is nothing to do but wait for the spool."""
@@ -558,7 +651,7 @@ class ControlPlane:
                 if max_wall is not None and time.time() - t0 > max_wall:
                     break
                 if exit_when_idle and self.idle():
-                    submits, cancels, _ = store.scan_inbox(self.state_dir)
+                    submits, cancels, _, _ = store.scan_inbox(self.state_dir)
                     if not submits and not cancels:
                         break
                 if stepped == 0:

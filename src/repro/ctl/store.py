@@ -32,11 +32,13 @@ import time
 import uuid
 from typing import Optional
 
-from repro.ctl.state import InvalidTransition, Job, JobEvent, JobState
+from repro.ctl.state import (TERMINAL, InvalidTransition, Job, JobEvent,
+                             JobState)
 
 JOURNAL = "journal.jsonl"
 HEARTBEAT = "heartbeat.json"
 INBOX = "inbox"
+REJECTED = "rejected"           # inbox/rejected/ — quarantined spool files
 DRAIN_FLAG = "drain.flag"
 
 #: journal record kind for job creation (not a state-machine event: it
@@ -120,6 +122,24 @@ def replay(state_dir: str) -> dict[str, Job]:
             jobs[jid] = Job(job_id=jid, spec=rec.get("spec", {}),
                             submitted_wall=rec["wall"])
             jobs[jid].updated_wall = rec["wall"]
+            if "state" in rec:          # compacted snapshot record
+                job = jobs[jid]
+                try:
+                    job.state = JobState(rec["state"])
+                except ValueError:
+                    pass                # defensive: never brick recovery
+                job.recoveries = int(rec.get("recoveries", 0))
+                job.migrations = int(rec.get("migrations", 0))
+                job.updated_wall = rec.get("updated", rec["wall"])
+                for k in ("cid", "device", "granted",
+                          "admitted_sim", "ends_sim"):
+                    if k in rec:
+                        setattr(job, {"granted": "granted_slices"}.get(k, k),
+                                rec[k])
+                if "error" in rec:
+                    job.error = rec["error"]
+                if "result" in rec:
+                    job.result = rec["result"]
             continue
         job = jobs.get(jid)
         if job is None:
@@ -137,6 +157,63 @@ def replay(state_dir: str) -> dict[str, Job]:
         if "result" in rec:
             job.result = rec["result"]
     return jobs
+
+
+def compact(state_dir: str) -> int:
+    """Bound journal growth: collapse every *terminal* job's history to one
+    snapshot record while keeping live jobs' full histories verbatim.
+
+    The snapshot is a SUBMIT record carrying the job's final folded state
+    (``state``/``recoveries``/``migrations``/payload fields, marked
+    ``compacted``), placed where the job's *last* record was so relative
+    ordering against live jobs and non-job records (e.g. fault records) is
+    preserved.  Replaying the compacted journal yields the same job table
+    as replaying the original.  The rewrite is atomic (tmp + fsync +
+    rename); callers must not hold the journal open across the call.
+    Returns the number of records dropped."""
+    path = os.path.join(state_dir, JOURNAL)
+    recs = _read_records(path)
+    if not recs:
+        return 0
+    jobs = replay(state_dir)
+    terminal = {jid for jid, j in jobs.items() if j.state in TERMINAL}
+    last_idx: dict[str, int] = {}
+    for i, rec in enumerate(recs):
+        if rec["job"] in terminal:
+            last_idx[rec["job"]] = i
+    out: list[dict] = []
+    for i, rec in enumerate(recs):
+        jid = rec["job"]
+        if jid not in terminal:
+            out.append(dict(rec))
+            continue
+        if last_idx[jid] != i:
+            continue
+        job = jobs[jid]
+        snap = {"seq": 0, "wall": job.submitted_wall, "job": jid,
+                "event": SUBMIT, "spec": job.spec,
+                "state": job.state.value, "recoveries": job.recoveries,
+                "migrations": job.migrations, "updated": job.updated_wall,
+                "compacted": True}
+        for key, attr in (("cid", "cid"), ("device", "device"),
+                          ("granted", "granted_slices"),
+                          ("admitted_sim", "admitted_sim"),
+                          ("ends_sim", "ends_sim"), ("error", "error"),
+                          ("result", "result")):
+            val = getattr(job, attr)
+            if val is not None:
+                snap[key] = val
+        out.append(snap)
+    for seq, rec in enumerate(out):
+        rec["seq"] = seq
+    tmp = f"{path}.tmp.{os.getpid()}.{uuid.uuid4().hex[:6]}"
+    with open(tmp, "w") as f:
+        for rec in out:
+            f.write(json.dumps(rec) + "\n")
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return len(recs) - len(out)
 
 
 # ---------------------------------------------------------------------------
@@ -168,31 +245,94 @@ def request_drain(state_dir: str):
                   {"wall": time.time()})
 
 
-def scan_inbox(state_dir: str) -> tuple[list[dict], list[dict], bool]:
-    """Daemon side: (submits, cancels, drain?) in arrival order.  Each
-    entry carries its ``_path`` for post-ingestion unlink."""
+def _jid_from_name(name: str) -> Optional[str]:
+    """Best-effort job id from a spool filename ``<t_ns>-<jid>.<verb>.json``.
+    Lets the daemon journal a FAIL for a corrupt-but-identifiable submit."""
+    stem = name
+    for suffix in (".submit.json", ".cancel.json"):
+        if stem.endswith(suffix):
+            stem = stem[:-len(suffix)]
+            break
+    else:
+        return None
+    if "-" not in stem:
+        return None
+    prefix, jid = stem.split("-", 1)
+    if not prefix.isdigit() or not jid:
+        return None
+    return jid
+
+
+def _quarantine(inbox: str, path: str, name: str, reason: str) -> dict:
+    """Move a malformed spool file to ``inbox/rejected/`` so it can never
+    wedge ingestion again, and report it."""
+    rejdir = os.path.join(inbox, REJECTED)
+    os.makedirs(rejdir, exist_ok=True)
+    dst = os.path.join(rejdir, name)
+    try:
+        os.replace(path, dst)
+    except OSError:
+        dst = path                      # raced away / unwritable: report only
+    return {"name": name, "path": dst, "reason": reason,
+            "job_id": _jid_from_name(name),
+            "kind": ("submit" if name.endswith(".submit.json")
+                     else "cancel" if name.endswith(".cancel.json")
+                     else "unknown")}
+
+
+def _spool_schema_error(name: str, payload) -> Optional[str]:
+    """Why a decoded spool payload is unusable, or None if well-formed."""
+    if not isinstance(payload, dict):
+        return f"payload is {type(payload).__name__}, expected object"
+    if not isinstance(payload.get("job_id"), str) or not payload["job_id"]:
+        return "missing or non-string job_id"
+    if name.endswith(".submit.json") and not isinstance(payload.get("spec"),
+                                                        dict):
+        return "missing or non-object spec"
+    return None
+
+
+def scan_inbox(state_dir: str) -> tuple[list[dict], list[dict], bool,
+                                        list[dict]]:
+    """Daemon side: (submits, cancels, drain?, rejected) in arrival order.
+    Each entry carries its ``_path`` for post-ingestion unlink.
+
+    Unreadable files (OSError) are skipped and retried next scan — they may
+    be mid-rename.  Files that *decode wrongly* (truncated JSON, or a wrong
+    shape: non-object payload, missing job id, submit without a spec) are
+    permanent poison: they are moved to ``inbox/rejected/`` and reported in
+    the fourth element so the daemon can journal a FAIL for any job id it
+    can still identify from the filename."""
     inbox = os.path.join(state_dir, INBOX)
     if not os.path.isdir(inbox):
-        return [], [], False
-    submits, cancels, drain = [], [], False
+        return [], [], False, []
+    submits, cancels, drain, rejected = [], [], False, []
     for name in sorted(os.listdir(inbox)):
         path = os.path.join(inbox, name)
         if name == DRAIN_FLAG:
             drain = True
             continue
-        if name.endswith(".tmp") or ".tmp." in name:
+        if name.endswith(".tmp") or ".tmp." in name or name == REJECTED:
             continue
         try:
             with open(path) as f:
                 payload = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            continue                    # partially-renamed/foreign file
+        except OSError:
+            continue                    # transient: retry next scan
+        except ValueError as e:         # bad JSON or not even valid UTF-8
+            rejected.append(_quarantine(inbox, path, name,
+                                        f"invalid JSON: {e}"))
+            continue
+        err = _spool_schema_error(name, payload)
+        if err is not None:
+            rejected.append(_quarantine(inbox, path, name, err))
+            continue
         payload["_path"] = path
         if name.endswith(".submit.json"):
             submits.append(payload)
         elif name.endswith(".cancel.json"):
             cancels.append(payload)
-    return submits, cancels, drain
+    return submits, cancels, drain, rejected
 
 
 def clear_drain(state_dir: str):

@@ -140,12 +140,12 @@ def test_spool_order_and_consume(tmp_path):
     d = str(tmp_path)
     ids = [store.request_submit(d, {"i": i}) for i in range(3)]
     store.request_cancel(d, ids[1])
-    submits, cancels, drain = store.scan_inbox(d)
+    submits, cancels, drain, rejected = store.scan_inbox(d)
     assert [s["job_id"] for s in submits] == ids       # arrival order
-    assert cancels[0]["job_id"] == ids[1] and not drain
+    assert cancels[0]["job_id"] == ids[1] and not drain and not rejected
     for e in submits + cancels:
         store.consume(e)
-    assert store.scan_inbox(d) == ([], [], False)
+    assert store.scan_inbox(d) == ([], [], False, [])
     store.request_drain(d)
     assert store.scan_inbox(d)[2] is True
 

@@ -1,0 +1,445 @@
+"""Fault domains: injectable device/slice failures, HP evacuation, and
+no-job-lost recovery across the hierarchy.
+
+Covers the whole fault path end to end: the :class:`FaultPlan` schedule
+itself, injection parity across both simulator engines (with the explicit
+fault-free golden — an empty plan is bit-for-bit the no-plan run), slice
+retirement under live holds, device death with HP elastic re-own on the
+destination, KV-floor-aware evacuation placement, and the control plane's
+journaled PREEMPT -> REQUEUE recovery (plus the spool-quarantine and
+journal-compaction satellites that keep that journal trustworthy)."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+try:                # only the property test needs hypothesis; plain tests run
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+from repro.configs.registry import get_config
+from repro.core.lithos import evaluate
+from repro.core.slices import SliceMap, VecSliceMap
+from repro.core.types import (ClusterConfig, ClusterSpec, DeviceSpec,
+                              FaultEvent, FaultPlan, NodeConfig, NodeSpec,
+                              Priority, reset_kernel_ids)
+from repro.core.workloads import AppSpec, fault_schedule, kv_floor_slices
+from repro.ctl import store
+from repro.ctl.daemon import ControlPlane, DaemonConfig
+from repro.ctl.state import JobState
+
+pytestmark = pytest.mark.fault
+
+OLMO = get_config("olmo-1b")
+LLAMA = get_config("llama3-8b")
+DEV = DeviceSpec.a100_like()
+ENGINES = ("ref", "vec")
+
+
+def hp_app(name="hp", rps=20.0, seed=0):
+    return AppSpec(name, OLMO, "fwd_infer", priority=Priority.HIGH, rps=rps,
+                   prompt_mix=((128, 1.0),), batch=4, fusion=8, seed=seed)
+
+
+def be_train(name="be", seed=0):
+    return AppSpec(name, LLAMA, "train", priority=Priority.BEST_EFFORT,
+                   train_batch=2, train_seq=2048, fusion=8, seed=seed)
+
+
+def sig(res):
+    return [(r.task.kid, r.task.queue_id, r.task.ordinal, r.t_submit,
+             r.t_start, r.t_end, r.slices, r.freq) for r in res.records]
+
+
+def run_node(engine, faults=None, horizon=6.0, ncfg=None):
+    reset_kernel_ids()
+    node = NodeSpec.uniform(2, DEV)
+    apps = [hp_app("hp0"), hp_app("hp1", seed=1),
+            be_train("be0"), be_train("be1", seed=1)]
+    return evaluate("lithos", node, apps, horizon=horizon, seed=0,
+                    placement=[0, 1, 0, 1], engine=engine, faults=faults,
+                    node_config=ncfg or NodeConfig(migration=True,
+                                                   validate=True))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / fault_schedule
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(t=1.0, kind="meteor_strike")
+    with pytest.raises(ValueError):
+        FaultEvent(t=-1.0, kind="device_dead")
+    with pytest.raises(ValueError):
+        FaultEvent(t=1.0, kind="slice_retired")          # needs slice_id
+    with pytest.raises(ValueError):
+        FaultEvent(t=1.0, kind="transient_stall")        # needs duration
+
+
+def test_fault_plan_routing():
+    plan = FaultPlan(events=(
+        FaultEvent(t=2.0, kind="device_dead", member=1),
+        FaultEvent(t=1.0, kind="slice_retired", member=1, slice_id=3),
+        FaultEvent(t=0.5, kind="transient_stall", member=0, duration=1e-3)))
+    assert plan.dead_members == (1,)
+    assert [f.t for f in plan.events_for(1)] == [1.0, 2.0]   # sorted by t
+    assert plan.events_for(2) == ()
+
+
+def test_fault_schedule_deterministic():
+    kw = dict(n_device_dead=1, n_slice_retired=2, n_transient=2,
+              slices_per_device=DEV.n_slices)
+    a = fault_schedule(4, 10.0, seed=7, **kw)
+    b = fault_schedule(4, 10.0, seed=7, **kw)
+    c = fault_schedule(4, 10.0, seed=8, **kw)
+    assert a == b
+    assert a != c
+    assert len(a.events) == 5
+    # non-fatal faults only land on survivors
+    for f in a.events:
+        if f.kind != "device_dead":
+            assert f.member not in a.dead_members
+        assert 0.2 * 10.0 <= f.t <= 0.8 * 10.0
+
+
+# ---------------------------------------------------------------------------
+# injection: golden + parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_no_fault_golden(engine):
+    """An empty FaultPlan is bit-for-bit the no-plan run: fault support
+    must cost fault-free runs nothing, on both engines."""
+    base = run_node(engine, faults=None)
+    empty = run_node(engine, faults=FaultPlan(events=()))
+    assert sig(base) == sig(empty)
+
+
+def test_engine_parity_with_faults():
+    plan = FaultPlan(events=(
+        FaultEvent(t=2.0, kind="device_dead", member=0),
+        FaultEvent(t=1.0, kind="slice_retired", member=1, slice_id=5),
+        FaultEvent(t=1.5, kind="transient_stall", member=1, duration=10e-3)))
+    a = run_node("ref", faults=plan)
+    b = run_node("vec", faults=plan)
+    assert sig(a) == sig(b)
+    assert a.coordinator.failed_members == b.coordinator.failed_members
+    assert dict(a.coordinator.ledger.current) == dict(
+        b.coordinator.ledger.current)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_transient_stall_delays_only_the_future(engine):
+    t_stall = 1.0
+    plan = FaultPlan(events=(
+        FaultEvent(t=t_stall, kind="transient_stall", member=0,
+                   duration=50e-3),))
+    base = run_node(engine, faults=None, horizon=3.0)
+    hit = run_node(engine, faults=plan, horizon=3.0)
+    before = lambda s: [r for r in s if r[5] <= t_stall]     # r[5] = t_end
+    assert before(sig(base)) == before(sig(hit))
+    assert sig(base) != sig(hit)                             # stall is felt
+    # the stall pushes in-flight completions out, never pulls them in
+    b_end = {r[0]: r[5] for r in sig(base)}
+    h_end = {r[0]: r[5] for r in sig(hit)}
+    common = set(b_end) & set(h_end)
+    assert all(h_end[k] >= b_end[k] - 1e-12 for k in common)
+    assert any(h_end[k] > b_end[k] for k in common)
+
+
+# ---------------------------------------------------------------------------
+# slice retirement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_slice_retired_shrinks_live_capacity(engine):
+    reset_kernel_ids()
+    plan = FaultPlan(events=(
+        FaultEvent(t=1.0, kind="slice_retired", member=0, slice_id=0),
+        FaultEvent(t=1.5, kind="slice_retired", member=0, slice_id=7)))
+    res = evaluate("lithos", DEV, [hp_app(), be_train()], horizon=4.0,
+                   seed=0, engine=engine, faults=plan)
+    sm = res.policy.slices
+    assert sm.retired == {0, 7}
+    assert sm.counts()["retired"] == 2
+    sm.check()
+    # quotas are guarantees: they must stay coverable by live capacity
+    total_quota = sum(q.slices for q in res.policy.quotas.values())
+    assert total_quota <= DEV.n_slices - 2
+    assert len(res.records) > 0
+
+
+@pytest.mark.parametrize("cls", (SliceMap, VecSliceMap))
+def test_retire_held_slice_waits_for_release(cls):
+    sm = cls(8)
+    sm.assign_owner(0, cid=1)
+    sm.acquire([0, 1], kid=42, borrower=1, now=0.0, eta=1.0)
+    assert sm.retire(1) is False                 # held: pending
+    assert sm.retire(2) is True                  # idle pool: immediate
+    assert 2 in sm.retired and 1 not in sm.retired
+    sm.release(42, 1.0)
+    assert 1 in sm.retired                       # retired at release
+    assert sm.counts()["retired"] == 2
+    sm.check()
+    assert set(sm.idle_pool()).isdisjoint({1, 2})
+
+
+# ---------------------------------------------------------------------------
+# device death: evacuation across the hierarchy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_device_dead_evacuates_all_tenants(engine):
+    t_dead = 2.0
+    plan = FaultPlan(events=(
+        FaultEvent(t=t_dead, kind="device_dead", member=0),))
+    res = run_node(engine, faults=plan)
+    coord = res.coordinator
+    assert coord.failed_members == {0}
+    assert coord.fault_log and coord.fault_log[0][1] == 0
+    assert not coord.stranded
+    # everyone ends up on the survivor, and keeps completing there
+    assert all(d == 1 for d in coord.ledger.current.values())
+    moved = {cid for _, cid, src, dst in coord.migration_log if src == 0}
+    assert moved == {0, 2}                       # hp0 + be0 lived on dev 0
+    for cid in moved:
+        assert any(r.task.queue_id == cid and r.t_end > t_dead
+                   for r in res.records), f"cid {cid} starved after fault"
+    # HP elastic re-own: the destination re-derives fair HP shares — the
+    # incumbent's monopoly quota (54) splits into 27/27
+    quotas = coord.policies[1].quotas
+    assert quotas[0].slices == quotas[1].slices == DEV.n_slices // 2
+    assert not coord.policies[1]._pending_reown
+
+
+def test_device_dead_with_no_destination_strands():
+    reset_kernel_ids()
+    plan = FaultPlan(events=(
+        FaultEvent(t=1.0, kind="device_dead", member=0),))
+    res = evaluate("lithos", NodeSpec.uniform(1, DEV),
+                   [hp_app(), be_train()], horizon=3.0, seed=0,
+                   placement=[0, 0], faults=plan,
+                   node_config=NodeConfig(migration=True))
+    coord = res.coordinator
+    assert coord.failed_members == {0}
+    assert coord.stranded == {0, 1}              # nowhere to go: flagged
+
+
+def test_evacuation_respects_kv_floor():
+    """A destination whose live capacity cannot cover a tenant's KV floor
+    is not a fit; ``can_host`` is the gate the evacuator uses."""
+    reset_kernel_ids()
+    from repro.core.node import build_node
+    coord = build_node("lithos", NodeSpec.uniform(2, DEV),
+                       [hp_app(), hp_app("hp1", seed=1)], [0, 1],
+                       horizon=1.0, seed=0, engine="ref",
+                       node_config=NodeConfig(migration=True))
+    m = coord.members[1]
+
+    class _C:                                   # client-shaped probe
+        def __init__(self, kv_bytes):
+            self.spec = hp_app()
+            self.kv_bytes = kv_bytes
+
+    assert m.can_host(_C(0.0))
+    floor_all = kv_floor_slices(OLMO, DEV, 1e18)     # clamps to n_slices
+    assert floor_all == DEV.n_slices
+    assert m.can_host(_C(1e18))                      # fits exactly, no faults
+    m.sim.n_retired = 1                              # one slice gone
+    assert not m.can_host(_C(1e18))                  # floor no longer fits
+    m.sim.n_retired = 0
+    m.sim.dead = True
+    assert not m.can_host(_C(0.0))                   # dead hosts nothing
+
+
+# ---------------------------------------------------------------------------
+# control plane: device loss is journaled, jobs recover, none lost
+# ---------------------------------------------------------------------------
+
+def _run_daemon(tmp_path, cfg, max_wall=60.0):
+    cp = ControlPlane(str(tmp_path), cfg)
+    cp.run(max_wall=max_wall, exit_when_idle=True)
+    return (store.replay(str(tmp_path)),
+            store._read_records(os.path.join(str(tmp_path), store.JOURNAL)))
+
+
+def test_ctl_device_loss_requeues_and_recovers(tmp_path):
+    plan = FaultPlan(events=(
+        FaultEvent(t=0.5, kind="device_dead", member=0),))
+    jids = [store.request_submit(
+        str(tmp_path), {"kind": "serve", "rps": 40.0, "duration": 2.0,
+                        "priority": "hp", "quota_slices": 8,
+                        "name": f"svc{i}"}) for i in range(3)]
+    jobs, recs = _run_daemon(
+        tmp_path, DaemonConfig(n_devices=2, fault_plan=plan, validate=True,
+                               poll_interval=0.0))
+    assert set(jobs) == set(jids)
+    for jid in jids:                             # never silently lost
+        assert jobs[jid].state is JobState.DONE, (jid, jobs[jid].error)
+        assert sum(1 for r in recs
+                   if r["job"] == jid and r["event"] == "finish") == 1
+    faults = [r for r in recs if r["event"] == "fault"]
+    assert len(faults) == 1 and faults[0]["device"] == 0
+    hit = [jid for jid in jids if jobs[jid].recoveries >= 1]
+    assert set(faults[0]["jobs"]) == set(hit) and hit
+    for jid in hit:                              # PREEMPT carries the fault
+        pre = [r for r in recs if r["job"] == jid and r["event"] == "preempt"]
+        assert any(r.get("fault", {}).get("device") == 0 for r in pre)
+        assert jobs[jid].device == 1             # finished on the survivor
+
+
+def test_ctl_quarantines_corrupt_spool_files(tmp_path):
+    d = str(tmp_path)
+    good = store.request_submit(d, {"kind": "serve", "rps": 20.0,
+                                    "duration": 0.2, "priority": "be"})
+    inbox = os.path.join(d, "inbox")
+    with open(os.path.join(inbox,
+                           f"{time.time_ns():020d}-trunc.submit.json"),
+              "w") as f:
+        f.write('{"job_id": "trunc", "spe')               # truncated JSON
+    with open(os.path.join(inbox,
+                           f"{time.time_ns():020d}-noise.submit.json"),
+              "wb") as f:
+        f.write(b"\x00\xff\xfe not json at all")          # binary garbage
+    jobs, recs = _run_daemon(
+        tmp_path, DaemonConfig(n_devices=1, poll_interval=0.0))
+    assert jobs[good].state is JobState.DONE
+    # corrupt files are quarantined, not retried forever
+    rejected = sorted(os.listdir(os.path.join(inbox, "rejected")))
+    assert len(rejected) == 2
+    assert not any(n.endswith(".submit.json")
+                   for n in os.listdir(inbox))            # inbox is clean
+    # identifiable jobs get a journaled FAIL instead of vanishing
+    for jid in ("trunc", "noise"):
+        assert jobs[jid].state is JobState.FAILED
+        assert "rejected spool file" in jobs[jid].error
+
+
+def test_compact_preserves_replay(tmp_path):
+    d = str(tmp_path)
+    j = store.Journal(d)
+    for i in range(20):
+        jid = f"job-{i:03d}"
+        j.append(jid, store.SUBMIT, spec={"kind": "train", "i": i},
+                 to="queued")
+        j.append(jid, "admit", cid=i, device=i % 2)
+        j.append(jid, "start", granted=4, admitted_sim=float(i),
+                 ends_sim=float(i) + 1.0)
+        if i % 3 == 0:
+            j.append(jid, "preempt")
+            j.append(jid, "requeue")
+            j.append(jid, "admit", cid=100 + i, device=(i + 1) % 2)
+            j.append(jid, "start", granted=4, admitted_sim=float(i) + 2.0,
+                     ends_sim=float(i) + 3.0)
+        if i < 15:                               # 15 terminal, 5 live
+            j.append(jid, "finish", result={"n_completed": i})
+    j.append("device-1", "fault", device=1, sim_now=9.0, jobs=[])
+    j.close()
+    before = store.replay(d)
+    n_before = len(store._read_records(os.path.join(d, store.JOURNAL)))
+    dropped = store.compact(d)
+    recs = store._read_records(os.path.join(d, store.JOURNAL))
+    assert dropped > 0 and len(recs) == n_before - dropped
+    assert [r["seq"] for r in recs] == list(range(len(recs)))
+    after = store.replay(d)
+    assert set(before) == set(after)
+    for jid in before:
+        for attr in ("state", "cid", "device", "granted_slices",
+                     "admitted_sim", "ends_sim", "recoveries", "migrations",
+                     "error", "result", "submitted_wall", "updated_wall"):
+            assert getattr(before[jid], attr) == getattr(after[jid], attr), \
+                (jid, attr)
+    # terminal jobs collapse to one snapshot; live jobs keep full history
+    per_job = {}
+    for r in recs:
+        per_job[r["job"]] = per_job.get(r["job"], 0) + 1
+    for i in range(15):
+        assert per_job[f"job-{i:03d}"] == 1
+    for i in range(15, 20):
+        assert per_job[f"job-{i:03d}"] >= 3
+    assert any(r["event"] == "fault" for r in recs)   # fault record survives
+    assert store.compact(d) == 0                      # idempotent
+    # a journal reopened after compaction appends at the renumbered tail
+    j2 = store.Journal(d)
+    assert j2.seq == len(recs)
+    j2.close()
+
+
+def test_daemon_compacts_over_threshold(tmp_path):
+    d = str(tmp_path)
+    for i in range(6):
+        store.request_submit(d, {"kind": "serve", "rps": 20.0,
+                                 "duration": 0.2, "priority": "be",
+                                 "name": f"tiny{i}"})
+    jobs, recs = _run_daemon(
+        tmp_path, DaemonConfig(n_devices=1, poll_interval=0.0,
+                               compact_threshold_bytes=1))
+    assert all(j.state is JobState.DONE for j in jobs.values())
+    # every terminal job's history is a single snapshot record
+    per_job = {}
+    for r in recs:
+        per_job[r["job"]] = per_job.get(r["job"], 0) + 1
+    assert all(n == 1 for n in per_job.values()), per_job
+    assert all(r.get("compacted") for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# property: random fault plans never break conservation or lose a tenant
+# ---------------------------------------------------------------------------
+
+def _check_cluster_under_plan(seed, n_dead, n_ret, n_tr):
+    reset_kernel_ids()
+    cluster = ClusterSpec.uniform(2, NodeSpec.uniform(2, DEV))
+    apps = [hp_app("hp0"), hp_app("hp1", seed=1),
+            be_train("be0"), be_train("be1", seed=1)]
+    placement = [(0, 0), (1, 0), (0, 1), (1, 1)]
+    plan = fault_schedule(4, 3.0, seed=seed, n_device_dead=n_dead,
+                          n_slice_retired=n_ret, n_transient=n_tr,
+                          slices_per_device=DEV.n_slices)
+    res = evaluate("lithos", cluster, apps, horizon=3.0, seed=0,
+                   placement=placement, faults=plan,
+                   cluster_config=ClusterConfig(
+                       migration=True, validate=True,
+                       node_config=NodeConfig(migration=True,
+                                              validate=True)))
+    top = res.coordinator
+    # a tenant is never left owned by a dead member unless it is flagged
+    # stranded (nowhere alive to go)
+    for cid, n in top.ledger.current.items():
+        assert n not in top.failed_members or cid in top.stranded, \
+            (cid, n, top.failed_members, top.stranded)
+    for nm in top.members:
+        inner = nm.coord
+        for cid, d in inner.ledger.current.items():
+            assert (d not in inner.failed_members
+                    or cid in inner.stranded), (cid, d)
+        # slice conservation on every surviving device
+        for d, p in enumerate(inner.policies):
+            sm = getattr(p, "slices", None)
+            if sm is not None and d not in inner.failed_members:
+                sm.check()
+
+
+if HAS_HYPOTHESIS:
+    @given(seed=st.integers(0, 1_000_000), n_dead=st.integers(0, 2),
+           n_ret=st.integers(0, 3), n_tr=st.integers(0, 3))
+    @settings(max_examples=10, deadline=None)
+    def test_random_fault_plans_preserve_invariants(seed, n_dead, n_ret,
+                                                    n_tr):
+        _check_cluster_under_plan(seed, n_dead, n_ret, n_tr)
+else:
+    def test_random_fault_plans_preserve_invariants():
+        pytest.skip("hypothesis not installed")
+
+
+@pytest.mark.parametrize("seed,n_dead,n_ret,n_tr",
+                         [(0, 1, 2, 1), (1, 2, 1, 0), (2, 0, 3, 3)])
+def test_fixed_fault_plans_preserve_invariants(seed, n_dead, n_ret, n_tr):
+    """Deterministic slice of the property test so the invariants run in
+    environments without hypothesis."""
+    _check_cluster_under_plan(seed, n_dead, n_ret, n_tr)
